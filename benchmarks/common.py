@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
+contract) and returns its rows for benchmarks.run to aggregate.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+Row = Dict[str, Any]
+
+
+def time_fn(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in microseconds (block_until_ready'd)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(rows: List[Row]) -> List[Row]:
+    for r in rows:
+        derived = r.get("derived", "")
+        print(f"{r['name']},{r['us_per_call']:.3f},{derived}", flush=True)
+    return rows
+
+
+def linear_fit(xs, ys):
+    """Least-squares slope/intercept + R^2 (for the paper's linearity claims)."""
+    xs = np.asarray(xs, float)
+    ys = np.asarray(ys, float)
+    slope, intercept = np.polyfit(xs, ys, 1)
+    pred = slope * xs + intercept
+    ss_res = float(((ys - pred) ** 2).sum())
+    ss_tot = float(((ys - ys.mean()) ** 2).sum()) or 1.0
+    return float(slope), float(intercept), 1.0 - ss_res / ss_tot

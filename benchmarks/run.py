@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §6 index).
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sweeps; the
+roofline module additionally needs experiments/dryrun artifacts.
+"""
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("layer_stacking", "Fig.4/§5.2"),
+    ("layer_width", "§5.3"),
+    ("memory_bench", "Table2/Fig.3/§5.1"),
+    ("quantization_bench", "Fig.5/§6.1"),
+    ("pruning_bench", "§6.2"),
+    ("multipart_bench", "§6.3"),
+    ("perf_gap", "§5.4"),
+    ("casestudy_bench", "§7"),
+    ("roofline", "§Roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+    failures = 0
+    for name, ref in MODULES:
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ({ref}) ---", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main(quick=args.quick)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Checkpointing: save/restore parameter + optimizer pytrees.
+
+The paper moves weights as raw binary files (BINARR/ARRBIN §4.3).  We keep
+that spirit — each leaf is a raw ``.npy`` under a directory keyed by its
+pytree path — plus a manifest with shapes/dtypes so restore can validate, and
+step-numbered directories with an atomic 'latest' marker for crash safety.
+"""
+
+from repro.checkpoint.npz import latest_step, restore, save
+
+__all__ = ["save", "restore", "latest_step"]

@@ -1,0 +1,86 @@
+"""Filesystem checkpoint format: one .npy per leaf + manifest, atomic latest."""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    """Write a checkpoint for `step`; returns the checkpoint directory."""
+    ckpt = os.path.join(directory, f"step_{step:08d}")
+    tmp = ckpt + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    manifest = {}
+    for key, leaf in flat:
+        arr = np.asarray(leaf)
+        fname = key.replace("/", "__") + ".npy"
+        dtype_name = str(arr.dtype)
+        if arr.dtype.kind not in "biufc":   # ml_dtypes (bfloat16, ...): store
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+        np.save(os.path.join(tmp, fname), arr)
+        manifest[key] = {"file": fname, "shape": list(arr.shape),
+                         "dtype": dtype_name}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f, indent=1)
+    if os.path.exists(ckpt):
+        raise FileExistsError(ckpt)
+    os.rename(tmp, ckpt)
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(directory, "LATEST.tmp"),
+               os.path.join(directory, "LATEST"))
+    return ckpt
+
+
+def latest_step(directory: str) -> Optional[int]:
+    marker = os.path.join(directory, "LATEST")
+    if not os.path.exists(marker):
+        return None
+    with open(marker) as f:
+        return int(f.read().strip())
+
+
+def restore(directory: str, tree_like: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of `tree_like` (shapes/dtypes validated)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    ckpt = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(ckpt, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+
+    flat, treedef = _flatten_with_paths(tree_like)
+    leaves = []
+    for key, like in flat:
+        meta = manifest.get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(ckpt, meta["file"]))
+        import ml_dtypes  # registers bfloat16 & friends with numpy
+        want_dtype = np.dtype(meta["dtype"])
+        if arr.dtype != want_dtype:         # bit-stored ml_dtypes round-trip
+            arr = arr.view(want_dtype)
+        want_shape = tuple(like.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{key}: shape {arr.shape} != expected {want_shape}")
+        leaves.append(jax.numpy.asarray(arr).astype(like.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

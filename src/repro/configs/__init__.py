@@ -1,0 +1,3 @@
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, ArchConfig, all_configs, get_config
+
+__all__ = ["ARCH_IDS", "INPUT_SHAPES", "ArchConfig", "all_configs", "get_config"]

@@ -1,0 +1,132 @@
+"""Architecture configuration schema + registry.
+
+One ``configs/<arch>.py`` per assigned architecture defines ``CONFIG`` with the
+exact assigned dimensions (source cited), plus the paper's own models
+(``icsml_mlp``, ``msf_detector``).  ``reduced()`` derives the smoke-test
+variant (≤2 layers, d_model ≤ 512, ≤4 experts) exercised on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+ARCH_IDS = (
+    "llava_next_34b",
+    "mamba2_370m",
+    "whisper_base",
+    "granite_moe_1b_a400m",
+    "command_r_35b",
+    "jamba_1_5_large_398b",
+    "nemotron_4_340b",
+    "qwen3_8b",
+    "command_r_plus_104b",
+    "mixtral_8x22b",
+)
+
+# Input shapes assigned to this paper (global batch, sequence length).
+INPUT_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    source: str = ""
+    # attention features
+    qk_norm: bool = False
+    mlp_kind: str = "swiglu"         # swiglu | gelu | squared_relu
+    bias: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None   # native SWA (mixtral)
+    swa_for_long: int = 4096         # window substituted on long_500k for
+                                     # full-attention archs (DESIGN.md §4)
+    parallel_block: bool = False     # command-r residual style
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2 / jamba mamba layers)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_groups: int = 1
+    conv_kernel: int = 4
+    # hybrid (jamba): one attention layer per `attn_period` mixer layers
+    attn_period: int = 0
+    # modality stubs
+    num_image_tokens: int = 0        # vlm: anyres patch-embedding prefix
+    encoder_frames: int = 0          # audio: encoder sequence length
+    # execution policy (the ICSML levers)
+    dtype: Any = jnp.bfloat16
+    quant: Optional[str] = None      # None | SINT | INT | DINT (serving)
+    kv_quant: bool = False           # int8 KV cache (§6.1 applied to state)
+    remat: str = "layer"             # layer | none — train remat policy
+    scan_unroll: int = 1             # lax.scan unroll for the layer stack
+    d_head_override: Optional[int] = None  # pad heads to mesh-divisible count
+    seq_parallel: bool = False       # Megatron-SP activation sharding
+    moe_group: int = 512             # tokens per MoE dispatch group
+    moe_dispatch_dtype: str = "float32"    # dispatch einsum precision
+    notes: str = ""
+
+    @property
+    def d_head(self) -> int:
+        if self.d_head_override:
+            return self.d_head_override
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: ≤2 layers, d_model ≤ 512, ≤4 experts."""
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4) if self.n_heads else 0
+        kw = dict(
+            n_layers=2 if self.family != "hybrid" else max(self.attn_period, 2),
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab=min(self.vocab, 1024),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 32) if self.ssm_state else 0,
+            ssm_headdim=min(self.ssm_headdim, 32) if self.ssm_headdim else 0,
+            num_image_tokens=min(self.num_image_tokens, 16) if self.num_image_tokens else 0,
+            encoder_frames=min(self.encoder_frames, 32) if self.encoder_frames else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else None,
+            swa_for_long=64,
+        )
+        return self.with_(**kw)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict:
+    return {a: get_config(a) for a in ARCH_IDS}

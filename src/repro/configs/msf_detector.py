@@ -1,0 +1,10 @@
+"""The §7 case-study model: densely connected classifier with 400 inputs
+(2 features x 10 readings/s x 20 s) and 4 hidden ReLU layers."""
+
+INPUT_SIZE = 400
+HIDDEN = (64, 32, 16)
+CLASSES = 2
+WINDOW_SECONDS = 20
+READINGS_PER_SECOND = 10
+N_FEATURES = 2
+SCAN_CYCLE_MS = 100

@@ -1,0 +1,27 @@
+"""repro.core — the ICSML framework re-hosted on JAX.
+
+Public API:
+
+* layers: :mod:`repro.core.layers` (Dense, Activation, Concat, Conv2D, ...)
+* graphs/models: :func:`repro.core.model.sequential`, :class:`Model`, :class:`Graph`
+* static memory planning: :func:`repro.core.memory.plan_memory`
+* quantization (§6.1): :func:`repro.core.quantize.quantize_params`
+* pruning (§6.2): :mod:`repro.core.prune`
+* multipart inference + scan-cycle runtime (§6.3): :mod:`repro.core.runtime`
+* porting methodology (§4.3): :mod:`repro.core.porting`
+"""
+
+from repro.core import graph, layers, memory, model, porting, prune, quantize, runtime
+from repro.core.graph import Graph, Node, chain
+from repro.core.model import Model, sequential
+from repro.core.runtime import (
+    MultipartInference,
+    ScanCycleRuntime,
+    SlidingWindowDetector,
+)
+
+__all__ = [
+    "graph", "layers", "memory", "model", "porting", "prune", "quantize",
+    "runtime", "Graph", "Node", "chain", "Model", "sequential",
+    "MultipartInference", "ScanCycleRuntime", "SlidingWindowDetector",
+]

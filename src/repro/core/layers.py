@@ -1,0 +1,457 @@
+"""ICSML layer set, re-hosted in JAX.
+
+The paper (§4.1) provides Dense, Activation, Concatenation layers plus the
+components needed for CNNs/ResNets/RNNs, and eight parameterizable activation
+functions.  Layers here follow the same contract as ICSML POUs:
+
+* all shapes are static and known ahead of time (``out_shape``),
+* evaluation is a pure function over explicitly-passed buffers (``apply``),
+* every layer reports its parameter memory and arithmetic cost so that the
+  static memory planner and the multipart-inference scheduler (§6.3) can plan
+  without executing anything.
+
+Layers operate on a *single sample* (PLCs process one scan-cycle's reading at
+a time); batching is applied externally with ``jax.vmap``.
+
+Quantized evaluation (§6.1) follows the paper's arithmetic exactly: weights are
+stored as int8/int16/int32 with a REAL (f32) scale; the input vector is
+quantized on the fly (N float mults), accumulation is integer, and the result
+is rescaled and biased in float (N float mults + N float adds) — reproducing
+the op-count analysis of §6.1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, jax.Array]
+Shape = Tuple[int, ...]
+
+# ---------------------------------------------------------------------------
+# Activation functions (§4.1: Binary Step, ELU, ReLU, Leaky ReLU, Sigmoid,
+# Softmax, Swish, Tanh).
+# ---------------------------------------------------------------------------
+
+
+def binary_step(x: jax.Array) -> jax.Array:
+    return jnp.where(x >= 0, 1.0, 0.0).astype(x.dtype)
+
+
+def elu(x: jax.Array, alpha: float = 1.0) -> jax.Array:
+    return jnp.where(x > 0, x, alpha * jnp.expm1(x))
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0)
+
+
+def leaky_relu(x: jax.Array, alpha: float = 0.01) -> jax.Array:
+    return jnp.where(x > 0, x, alpha * x)
+
+
+def sigmoid(x: jax.Array) -> jax.Array:
+    return jax.nn.sigmoid(x)
+
+
+def softmax(x: jax.Array) -> jax.Array:
+    return jax.nn.softmax(x, axis=-1)
+
+
+def swish(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def tanh(x: jax.Array) -> jax.Array:
+    return jnp.tanh(x)
+
+
+ACTIVATIONS: Dict[str, Callable[[jax.Array], jax.Array]] = {
+    "binary_step": binary_step,
+    "elu": elu,
+    "relu": relu,
+    "leaky_relu": leaky_relu,
+    "sigmoid": sigmoid,
+    "softmax": softmax,
+    "swish": swish,
+    "tanh": tanh,
+    "linear": lambda x: x,
+}
+
+# IEC 61131-3 integer types used for quantization (§6.1 / Table 2).
+IEC_INT_TYPES: Dict[str, np.dtype] = {
+    "SINT": np.dtype(np.int8),    # 8-bit
+    "INT": np.dtype(np.int16),    # 16-bit
+    "DINT": np.dtype(np.int32),   # 32-bit
+}
+
+
+def _prod(xs: Sequence[int]) -> int:
+    return int(math.prod(xs)) if xs else 1
+
+
+# ---------------------------------------------------------------------------
+# Layer base
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Layer:
+    """Base class for ICSML layers."""
+
+    name: str = dataclasses.field(default="", kw_only=True)
+
+    # -- static planning interface -------------------------------------------------
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        raise NotImplementedError
+
+    def init_params(self, key: jax.Array, in_shapes: List[Shape]) -> Params:
+        return {}
+
+    def param_bytes(self, in_shapes: List[Shape]) -> int:
+        return 0
+
+    def flops(self, in_shapes: List[Shape]) -> int:
+        """Approximate arithmetic ops for one evaluation (multipart planning)."""
+        return _prod(self.out_shape(in_shapes))
+
+    # -- execution -----------------------------------------------------------------
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Input(Layer):
+    """Input copy layer — ICSML's input layer 'performs a simple copy' (§5.2)."""
+
+    features: Tuple[int, ...] = ()
+
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        return tuple(self.features) if self.features else in_shapes[0]
+
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        return inputs[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense(Layer):
+    """Fully connected layer: ``y = act(x @ W + b)``.
+
+    Supports the paper's quantized evaluation when params were produced by
+    :func:`repro.core.quantize.quantize_params`: params then hold ``qw``
+    (integer weights), ``w_scale`` (REAL scaling factor(s)), and ``b``.
+    """
+
+    units: int = 0
+    activation: str = "linear"
+    use_bias: bool = True
+
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        return (self.units,)
+
+    def init_params(self, key: jax.Array, in_shapes: List[Shape]) -> Params:
+        (in_features,) = in_shapes[0]
+        kw, _ = jax.random.split(key)
+        limit = math.sqrt(6.0 / (in_features + self.units))  # Glorot uniform
+        w = jax.random.uniform(
+            kw, (in_features, self.units), jnp.float32, -limit, limit
+        )
+        params = {"w": w}
+        if self.use_bias:
+            params["b"] = jnp.zeros((self.units,), jnp.float32)
+        return params
+
+    def param_bytes(self, in_shapes: List[Shape]) -> int:
+        (in_features,) = in_shapes[0]
+        total = in_features * self.units * 4
+        if self.use_bias:
+            total += self.units * 4
+        return total
+
+    def flops(self, in_shapes: List[Shape]) -> int:
+        (in_features,) = in_shapes[0]
+        return 2 * in_features * self.units
+
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        x = inputs[0]
+        if "qw" in params:
+            y = _quantized_matvec(x, params)
+        else:
+            y = x @ params["w"]
+            if self.use_bias:
+                y = y + params["b"]
+        return ACTIVATIONS[self.activation](y)
+
+
+def _quantized_matvec(x: jax.Array, params: Params) -> jax.Array:
+    """Paper-faithful quantized dense evaluation (§6.1).
+
+    For an N-in/M-out layer this performs:
+      * N float multiplications to quantize the activations,
+      * N*M integer multiplications + N*M integer additions (the dot product),
+      * M float multiplications (rescale) + M float additions (bias),
+    matching the §6.1 operation analysis (with per-channel scales — the
+    beyond-paper variant — the rescale stays M float mults).
+    """
+    qw = params["qw"]                      # (N, M) integer
+    w_scale = params["w_scale"]            # () per-tensor or (M,) per-channel
+    x_scale = params["x_scale"]            # () REAL scaling factor for inputs
+    info = jnp.iinfo(qw.dtype)
+    # Quantize activations on the fly (N float mults + round).
+    xq = jnp.clip(jnp.round(x / x_scale), info.min, info.max).astype(qw.dtype)
+    if qw.dtype == jnp.int8:
+        # Native integer dot product with a wide accumulator — the TPU MXU
+        # int8 path (and the PLC's INT→DINT accumulate).
+        acc = jax.lax.dot_general(
+            xq,
+            qw,
+            (((xq.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32)
+    else:
+        # INT/DINT: int16/int32 products overflow an int32 accumulator (and
+        # TPUs have no int16/int32 MXU mode), so the arithmetic is emulated
+        # in f32 — the storage compression (Table 2) is what these schemes
+        # buy on TPU; DESIGN.md §2 records the adaptation.
+        acc = jax.lax.dot_general(
+            xq.astype(jnp.float32),
+            qw.astype(jnp.float32),
+            (((xq.ndim - 1,), (0,)), ((), ())),
+        )
+    y = acc * (x_scale * w_scale)
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Activation(Layer):
+    """Standalone activation layer (§4.1)."""
+
+    fn: str = "relu"
+
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        return in_shapes[0]
+
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        return ACTIVATIONS[self.fn](inputs[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class Concat(Layer):
+    """Concatenation layer — enables branching models and RNNs (§4.1, §8.2)."""
+
+    axis: int = -1
+
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        axis = self.axis % len(in_shapes[0])
+        out = list(in_shapes[0])
+        out[axis] = sum(s[axis] for s in in_shapes)
+        for s in in_shapes:
+            for d, (a, b) in enumerate(zip(s, in_shapes[0])):
+                if d != axis and a != b:
+                    raise ValueError(f"concat shape mismatch: {in_shapes}")
+        return tuple(out)
+
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        return jnp.concatenate(inputs, axis=self.axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class Add(Layer):
+    """Elementwise residual add — building block for ResNets (§4.1)."""
+
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        return in_shapes[0]
+
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        out = inputs[0]
+        for x in inputs[1:]:
+            out = out + x
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Flatten(Layer):
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        return (_prod(in_shapes[0]),)
+
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        return inputs[0].reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv2D(Layer):
+    """2-D convolution over a single (H, W, C) sample."""
+
+    filters: int = 0
+    kernel_size: Tuple[int, int] = (3, 3)
+    strides: Tuple[int, int] = (1, 1)
+    padding: str = "SAME"
+    activation: str = "linear"
+    use_bias: bool = True
+
+    def _spatial_out(self, size: int, k: int, s: int) -> int:
+        if self.padding == "SAME":
+            return -(-size // s)
+        return (size - k) // s + 1
+
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        h, w, _ = in_shapes[0]
+        kh, kw = self.kernel_size
+        sh, sw = self.strides
+        return (self._spatial_out(h, kh, sh), self._spatial_out(w, kw, sw), self.filters)
+
+    def init_params(self, key: jax.Array, in_shapes: List[Shape]) -> Params:
+        _, _, cin = in_shapes[0]
+        kh, kw = self.kernel_size
+        fan_in = kh * kw * cin
+        limit = math.sqrt(6.0 / (fan_in + self.filters))
+        w = jax.random.uniform(
+            key, (kh, kw, cin, self.filters), jnp.float32, -limit, limit
+        )
+        params = {"w": w}
+        if self.use_bias:
+            params["b"] = jnp.zeros((self.filters,), jnp.float32)
+        return params
+
+    def param_bytes(self, in_shapes: List[Shape]) -> int:
+        _, _, cin = in_shapes[0]
+        kh, kw = self.kernel_size
+        return (kh * kw * cin * self.filters + (self.filters if self.use_bias else 0)) * 4
+
+    def flops(self, in_shapes: List[Shape]) -> int:
+        _, _, cin = in_shapes[0]
+        oh, ow, _ = self.out_shape(in_shapes)
+        kh, kw = self.kernel_size
+        return 2 * oh * ow * kh * kw * cin * self.filters
+
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        x = inputs[0][None]  # add batch dim
+        y = jax.lax.conv_general_dilated(
+            x,
+            params["w"],
+            window_strides=self.strides,
+            padding=self.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )[0]
+        if self.use_bias:
+            y = y + params["b"]
+        return ACTIVATIONS[self.activation](y)
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthwiseConv2D(Layer):
+    """Depthwise convolution (MobileNet ConvDW blocks — §6.3 multipart demo)."""
+
+    kernel_size: Tuple[int, int] = (3, 3)
+    strides: Tuple[int, int] = (1, 1)
+    padding: str = "SAME"
+    activation: str = "linear"
+    use_bias: bool = True
+
+    def _spatial_out(self, size: int, k: int, s: int) -> int:
+        if self.padding == "SAME":
+            return -(-size // s)
+        return (size - k) // s + 1
+
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        h, w, c = in_shapes[0]
+        kh, kw = self.kernel_size
+        sh, sw = self.strides
+        return (self._spatial_out(h, kh, sh), self._spatial_out(w, kw, sw), c)
+
+    def init_params(self, key: jax.Array, in_shapes: List[Shape]) -> Params:
+        _, _, cin = in_shapes[0]
+        kh, kw = self.kernel_size
+        limit = math.sqrt(6.0 / (kh * kw + 1))
+        w = jax.random.uniform(key, (kh, kw, 1, cin), jnp.float32, -limit, limit)
+        params = {"w": w}
+        if self.use_bias:
+            params["b"] = jnp.zeros((cin,), jnp.float32)
+        return params
+
+    def param_bytes(self, in_shapes: List[Shape]) -> int:
+        _, _, cin = in_shapes[0]
+        kh, kw = self.kernel_size
+        return (kh * kw * cin + (cin if self.use_bias else 0)) * 4
+
+    def flops(self, in_shapes: List[Shape]) -> int:
+        oh, ow, c = self.out_shape(in_shapes)
+        kh, kw = self.kernel_size
+        return 2 * oh * ow * kh * kw * c
+
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        x = inputs[0][None]
+        cin = x.shape[-1]
+        y = jax.lax.conv_general_dilated(
+            x,
+            params["w"],
+            window_strides=self.strides,
+            padding=self.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=cin,
+        )[0]
+        if self.use_bias:
+            y = y + params["b"]
+        return ACTIVATIONS[self.activation](y)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchNorm(Layer):
+    """Inference-mode batch norm: a static scale/shift (folded statistics)."""
+
+    epsilon: float = 1e-3
+    activation: str = "linear"
+
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        return in_shapes[0]
+
+    def init_params(self, key: jax.Array, in_shapes: List[Shape]) -> Params:
+        c = in_shapes[0][-1]
+        return {
+            "gamma": jnp.ones((c,), jnp.float32),
+            "beta": jnp.zeros((c,), jnp.float32),
+            "mean": jnp.zeros((c,), jnp.float32),
+            "var": jnp.ones((c,), jnp.float32),
+        }
+
+    def param_bytes(self, in_shapes: List[Shape]) -> int:
+        return in_shapes[0][-1] * 4 * 4
+
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        x = inputs[0]
+        inv = jax.lax.rsqrt(params["var"] + self.epsilon) * params["gamma"]
+        return ACTIVATIONS[self.activation]((x - params["mean"]) * inv + params["beta"])
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalAvgPool(Layer):
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        return (in_shapes[0][-1],)
+
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        return inputs[0].mean(axis=(0, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class Lambda(Layer):
+    """Custom-functionality layer — ICSML's interface-template answer to the
+    Keras lambda layer (§4.2.2).  ``fn`` must be a pure, shape-preserving-or-
+    declared JAX function; ``out`` declares the output shape (static planning
+    requires it, exactly like implementing the ST interface template)."""
+
+    fn: Optional[Callable[..., jax.Array]] = None
+    out: Tuple[int, ...] = ()
+
+    def out_shape(self, in_shapes: List[Shape]) -> Shape:
+        return tuple(self.out) if self.out else in_shapes[0]
+
+    def apply(self, params: Params, inputs: List[jax.Array]) -> jax.Array:
+        assert self.fn is not None, "Lambda layer requires fn"
+        return self.fn(*inputs)

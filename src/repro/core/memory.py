@@ -1,0 +1,171 @@
+"""Static memory planner — the JAX re-host of ICSML's ``dataMem`` (§4.2.1).
+
+IEC 61131-3 has no dynamic memory management, so ICSML statically declares
+every weight matrix, bias vector and activation buffer, and wraps the raw
+memory areas in ``dataMem`` structures carrying address + dimensionality
+metadata.  Layers share these areas by reference, which both avoids
+call-by-value duplication and lets one flat region back many logical buffers.
+
+Here the same discipline is made explicit and *checkable*:
+
+* :func:`plan_memory` computes, ahead of time, a liveness interval for every
+  activation buffer in the linear schedule and packs them into a single flat
+  arena with first-fit offset assignment (buffers whose lifetimes do not
+  overlap share memory — the dataMem reuse trick, automated).
+* :class:`MemoryPlan` is the dataMem table: per-buffer offset, size, shape and
+  live interval, plus the arena size.  ``validate()`` proves the no-overlap
+  invariant; property tests fuzz it.
+* :func:`arena_read` / :func:`arena_write` are the traced accessors used by
+  planned execution (`Model.apply_planned`) — activations genuinely live in
+  one donated f32 buffer, as on the PLC.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph
+
+Shape = Tuple[int, ...]
+
+# TPU lane width; aligning buffer offsets to 128 f32 elements keeps
+# dynamic-slice reads layout-friendly.  (The PLC analogue is word alignment.)
+DEFAULT_ALIGN = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferInfo:
+    """One dataMem entry: a buffer's address + metadata (§4.2.1)."""
+
+    uid: int                 # producing node
+    offset: int              # element offset into the arena
+    size: int                # number of elements
+    shape: Shape             # logical dimensionality ("dimensions" metadata)
+    live: Tuple[int, int]    # [first, last] schedule positions (inclusive)
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.size
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryPlan:
+    """The static activation-memory plan for one model."""
+
+    arena_size: int                      # elements (f32)
+    buffers: Dict[int, BufferInfo]
+
+    @property
+    def arena_bytes(self) -> int:
+        return self.arena_size * 4
+
+    def validate(self) -> None:
+        """No two *concurrently live* buffers may overlap, and every buffer
+        must fit in the arena.  Raises ``ValueError`` on violation."""
+        infos = list(self.buffers.values())
+        for b in infos:
+            if b.offset < 0 or b.end > self.arena_size:
+                raise ValueError(f"buffer {b.uid} [{b.offset},{b.end}) outside arena")
+            if b.live[0] > b.live[1]:
+                raise ValueError(f"buffer {b.uid} has empty liveness {b.live}")
+        for i, a in enumerate(infos):
+            for b in infos[i + 1:]:
+                lives_overlap = not (a.live[1] < b.live[0] or b.live[1] < a.live[0])
+                mem_overlap = not (a.end <= b.offset or b.end <= a.offset)
+                if lives_overlap and mem_overlap:
+                    raise ValueError(
+                        f"live buffers overlap: {a.uid}@[{a.offset},{a.end}) "
+                        f"live{a.live} vs {b.uid}@[{b.offset},{b.end}) live{b.live}"
+                    )
+
+
+def _align(x: int, align: int) -> int:
+    return ((x + align - 1) // align) * align
+
+
+def plan_memory(
+    graph: Graph,
+    input_shape: Sequence[int],
+    *,
+    align: int = DEFAULT_ALIGN,
+    reuse: bool = True,
+) -> MemoryPlan:
+    """First-fit static packing of activation buffers.
+
+    With ``reuse=False`` every buffer gets a private region (the naive layout a
+    programmer would write by hand, and what ICSML models declare explicitly);
+    with ``reuse=True`` dead buffers' space is recycled — the paper's dataMem
+    sharing, automated.  Both layouts satisfy ``validate()``.
+    """
+    shapes = graph.infer_shapes(input_shape)
+    last_use = graph.last_use()
+    pos = {uid: i for i, uid in enumerate(graph.schedule)}
+
+    buffers: Dict[int, BufferInfo] = {}
+    # Free-list of (offset, size) holes, plus a bump pointer at the end.
+    allocated: List[BufferInfo] = []
+    arena_end = 0
+
+    for node in graph.nodes:
+        uid = node.uid
+        size = _align(max(1, math.prod(shapes[uid]) if shapes[uid] else 1), align)
+        first = pos[uid]
+        last = last_use[uid]
+
+        offset = None
+        if reuse:
+            # First-fit: scan candidate offsets in increasing order, taking the
+            # first gap not overlapping any buffer live during [first, last].
+            live_now = sorted(
+                (b for b in allocated if b.live[1] >= first),
+                key=lambda b: b.offset,
+            )
+            cursor = 0
+            for b in live_now:
+                if b.offset - cursor >= size:
+                    break
+                cursor = max(cursor, b.end)
+            offset = cursor
+        else:
+            offset = arena_end
+
+        info = BufferInfo(uid=uid, offset=offset, size=size,
+                          shape=shapes[uid], live=(first, last))
+        buffers[uid] = info
+        allocated.append(info)
+        arena_end = max(arena_end, info.end)
+
+    plan = MemoryPlan(arena_size=max(arena_end, align), buffers=buffers)
+    plan.validate()
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Traced arena accessors (planned execution)
+# ---------------------------------------------------------------------------
+
+
+def arena_write(arena: jax.Array, info: BufferInfo, value: jax.Array) -> jax.Array:
+    """Store ``value`` (any shape) into its dataMem region of the flat arena."""
+    flat = value.reshape(-1).astype(arena.dtype)
+    padded = jnp.zeros((info.size,), arena.dtype).at[: flat.shape[0]].set(flat)
+    return jax.lax.dynamic_update_slice(arena, padded, (info.offset,))
+
+
+def arena_read(arena: jax.Array, info: BufferInfo) -> jax.Array:
+    """Load a logical tensor back out of the arena using its metadata."""
+    n = math.prod(info.shape) if info.shape else 1
+    flat = jax.lax.dynamic_slice(arena, (info.offset,), (info.size,))
+    return flat[:n].reshape(info.shape)
+
+
+def activation_bytes(graph: Graph, input_shape: Sequence[int]) -> Dict[str, int]:
+    """Memory accounting used by the §5.1 benchmark: naive vs planned arena."""
+    naive = plan_memory(graph, input_shape, reuse=False)
+    packed = plan_memory(graph, input_shape, reuse=True)
+    return {"naive": naive.arena_bytes, "planned": packed.arena_bytes}

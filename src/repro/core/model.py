@@ -1,0 +1,146 @@
+"""ICSML Models: an array of layers wired together + an inference method (§4.1).
+
+Two execution modes are provided and tested for bit-equality:
+
+* :meth:`Model.apply` — reference execution over a per-node value table
+  (how a conventional framework would do it; our "TFLite stand-in" path uses
+  this, unplanned and unquantized).
+* :meth:`Model.apply_planned` — ICSML execution: every activation lives at
+  its statically-planned offset inside one flat arena (see
+  :mod:`repro.core.memory`), and layers are evaluated strictly in the linear
+  schedule.  This is the faithful re-host of §4.2.1 + §4.2.3.
+
+Both modes are pure functions of (params, input) and jit-compatible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import memory as memlib
+from repro.core.graph import Graph, chain
+from repro.core.layers import Layer, Params
+
+ParamTree = Dict[int, Params]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """A statically-planned ICSML model."""
+
+    graph: Graph
+    input_shape: Tuple[int, ...]
+
+    # ------------------------------------------------------------------ setup
+    def init_params(self, key: jax.Array) -> ParamTree:
+        shapes = self.graph.infer_shapes(self.input_shape)
+        params: ParamTree = {}
+        for node in self.graph.nodes:
+            key, sub = jax.random.split(key)
+            in_shapes = [shapes[r] for r in node.inputs] or [self.input_shape]
+            params[node.uid] = node.layer.init_params(sub, in_shapes)
+        return params
+
+    def memory_plan(self, *, reuse: bool = True) -> memlib.MemoryPlan:
+        return memlib.plan_memory(self.graph, self.input_shape, reuse=reuse)
+
+    # -------------------------------------------------------------- accounting
+    def node_in_shapes(self) -> Dict[int, List[Tuple[int, ...]]]:
+        shapes = self.graph.infer_shapes(self.input_shape)
+        return {
+            n.uid: ([shapes[r] for r in n.inputs] or [self.input_shape])
+            for n in self.graph.nodes
+        }
+
+    def param_bytes(self) -> int:
+        in_shapes = self.node_in_shapes()
+        return sum(
+            n.layer.param_bytes(in_shapes[n.uid]) for n in self.graph.nodes
+        )
+
+    def flops(self) -> int:
+        in_shapes = self.node_in_shapes()
+        return sum(n.layer.flops(in_shapes[n.uid]) for n in self.graph.nodes)
+
+    def node_flops(self) -> Dict[int, int]:
+        in_shapes = self.node_in_shapes()
+        return {n.uid: n.layer.flops(in_shapes[n.uid]) for n in self.graph.nodes}
+
+    # -------------------------------------------------------------- execution
+    def apply(self, params: ParamTree, x: jax.Array) -> jax.Array:
+        """Reference (value-table) execution in linear-schedule order."""
+        values: Dict[int, jax.Array] = {}
+        for node in self.graph.nodes:
+            inputs = [values[r] for r in node.inputs] or [x]
+            values[node.uid] = node.layer.apply(params[node.uid], inputs)
+        return values[self.graph.output_uid]
+
+    def apply_planned(self, params: ParamTree, x: jax.Array) -> jax.Array:
+        """Planned (arena) execution — activations live in one flat buffer."""
+        arena, plan = self._run_arena(params, x)
+        return memlib.arena_read(arena, plan.buffers[self.graph.output_uid])
+
+    def _run_arena(
+        self, params: ParamTree, x: jax.Array, upto: Optional[int] = None
+    ) -> Tuple[jax.Array, memlib.MemoryPlan]:
+        plan = self.memory_plan()
+        arena = jnp.zeros((plan.arena_size,), jnp.float32)
+        nodes = self.graph.nodes if upto is None else self.graph.nodes[:upto]
+        for node in nodes:
+            if node.inputs:
+                inputs = [memlib.arena_read(arena, plan.buffers[r]) for r in node.inputs]
+            else:
+                inputs = [x]
+            out = node.layer.apply(params[node.uid], inputs)
+            arena = memlib.arena_write(arena, plan.buffers[node.uid], out)
+        return arena, plan
+
+    # Segment execution used by multipart inference (§6.3): evaluate schedule
+    # positions [start, stop) over an existing arena.
+    def apply_segment(
+        self,
+        params: ParamTree,
+        arena: jax.Array,
+        x: jax.Array,
+        start: int,
+        stop: int,
+        plan: Optional[memlib.MemoryPlan] = None,
+    ) -> jax.Array:
+        plan = plan or self.memory_plan()
+        for node in self.graph.nodes[start:stop]:
+            if node.inputs:
+                inputs = [memlib.arena_read(arena, plan.buffers[r]) for r in node.inputs]
+            else:
+                inputs = [x]
+            out = node.layer.apply(params[node.uid], inputs)
+            arena = memlib.arena_write(arena, plan.buffers[node.uid], out)
+        return arena
+
+    def read_output(self, arena: jax.Array, plan: Optional[memlib.MemoryPlan] = None) -> jax.Array:
+        plan = plan or self.memory_plan()
+        return memlib.arena_read(arena, plan.buffers[self.graph.output_uid])
+
+    # ------------------------------------------------------------------- misc
+    def summary(self) -> str:
+        shapes = self.graph.infer_shapes(self.input_shape)
+        in_shapes = self.node_in_shapes()
+        lines = ["uid  layer                     out_shape        params(B)   flops"]
+        for n in self.graph.nodes:
+            lines.append(
+                f"{n.uid:<4d} {type(n.layer).__name__:<25s} "
+                f"{str(shapes[n.uid]):<16s} "
+                f"{n.layer.param_bytes(in_shapes[n.uid]):<11d} "
+                f"{n.layer.flops(in_shapes[n.uid])}"
+            )
+        plan = self.memory_plan()
+        lines.append(f"arena: {plan.arena_bytes} B, params: {self.param_bytes()} B")
+        return "\n".join(lines)
+
+
+def sequential(layers: Sequence[Layer], input_shape: Sequence[int]) -> Model:
+    """Convenience: build the common sequential model."""
+    return Model(graph=chain(layers), input_shape=tuple(input_shape))

@@ -1,0 +1,172 @@
+"""Weight pruning and operation skipping (§6.2), adapted to TPU.
+
+The paper prunes weights to zero and then investigates whether the runtime can
+*skip* the corresponding arithmetic.  Findings on the PLC:
+
+* zeroing all weights barely helps (52.13 → 47.62 ms): no automatic skipping;
+* a manual per-element IF-skip *loses* in float (50.84 ms: the check costs
+  more than the FLOP) and *wins* under SINT quantization (36.39 → 20.87 ms);
+* checking inputs AND weights wins further (34.19 ms).
+
+TPU adaptation (documented in DESIGN.md): a systolic MXU cannot predicate
+per-MAC, so the paper's insight — *sparsity only pays when skipping is made
+structural* — maps to **block sparsity**: the weight matrix is tiled into
+MXU-aligned blocks, zero blocks are dropped from the kernel grid entirely
+(``repro.kernels.sparse_matmul``), and the per-element IF becomes a gather of
+nonzero block indices computed at plan time.  The paper's element-wise
+economics are reproduced analytically by :func:`skip_op_counts`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layers import Dense
+from repro.core.model import Model, ParamTree
+
+
+def magnitude_prune(w: jax.Array, sparsity: float) -> jax.Array:
+    """Zero out the smallest-magnitude ``sparsity`` fraction of weights."""
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(f"sparsity must be in [0, 1), got {sparsity}")
+    if sparsity == 0.0:
+        return w
+    k = int(math.ceil(sparsity * w.size))  # at least `sparsity` achieved
+    if k == 0:
+        return w
+    thresh = jnp.sort(jnp.abs(w).reshape(-1))[k - 1]
+    return jnp.where(jnp.abs(w) <= thresh, 0.0, w)
+
+
+def block_magnitude_prune(
+    w: jax.Array, sparsity: float, block: Tuple[int, int] = (128, 128)
+) -> jax.Array:
+    """Structured pruning: zero whole MXU-aligned blocks by L1 block norm."""
+    bi, bj = block
+    n, m = w.shape
+    if n % bi or m % bj:
+        raise ValueError(f"weight shape {w.shape} not divisible by block {block}")
+    blocks = w.reshape(n // bi, bi, m // bj, bj)
+    norms = jnp.abs(blocks).sum(axis=(1, 3))
+    k = int(round(sparsity * norms.size))
+    if k == 0:
+        return w
+    thresh = jnp.sort(norms.reshape(-1))[k - 1]
+    mask = (norms > thresh)[:, None, :, None]
+    return (blocks * mask).reshape(n, m)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSparseWeight:
+    """Plan-time representation consumed by the block-sparse kernel.
+
+    ``indices[k] = (bi, bj)`` lists the nonzero blocks; ``values[k]`` holds the
+    corresponding (block_n, block_m) tile.  This is the 'precompiled model'
+    the paper proposes in §8.1 ('automatically precompiling models to fully
+    exploit weight pruning inference latency benefits').
+    """
+
+    values: jax.Array          # (nnz_blocks, bn, bm)
+    indices: np.ndarray        # (nnz_blocks, 2) static int32 block coordinates
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+
+    @property
+    def nnz_blocks(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def density(self) -> float:
+        bn, bm = self.block
+        total = (self.shape[0] // bn) * (self.shape[1] // bm)
+        return self.nnz_blocks / max(total, 1)
+
+    def to_dense(self) -> jax.Array:
+        bn, bm = self.block
+        out = jnp.zeros(self.shape, self.values.dtype)
+        for k, (bi, bj) in enumerate(self.indices):
+            out = out.at[bi * bn : (bi + 1) * bn, bj * bm : (bj + 1) * bm].set(
+                self.values[k]
+            )
+        return out
+
+
+def compress_blocks(
+    w: jax.Array, block: Tuple[int, int] = (128, 128), tol: float = 0.0
+) -> BlockSparseWeight:
+    """Extract the nonzero-block structure of a (pruned) weight matrix."""
+    bn, bm = block
+    n, m = w.shape
+    if n % bn or m % bm:
+        raise ValueError(f"shape {w.shape} not divisible by block {block}")
+    w_host = np.asarray(w)
+    tiles = w_host.reshape(n // bn, bn, m // bm, bm).transpose(0, 2, 1, 3)
+    nz = np.argwhere(np.abs(tiles).max(axis=(2, 3)) > tol).astype(np.int32)
+    if nz.size == 0:
+        nz = np.zeros((1, 2), np.int32)  # keep at least one block (static shape)
+    values = jnp.asarray(tiles[nz[:, 0], nz[:, 1]])
+    return BlockSparseWeight(values=values, indices=nz, shape=(n, m), block=block)
+
+
+def prune_model(
+    model: Model, params: ParamTree, sparsity: float, *, block: Tuple[int, int] | None = None
+) -> ParamTree:
+    """Magnitude-prune every Dense weight in a model."""
+    out: ParamTree = {}
+    for node in model.graph.nodes:
+        p = dict(params[node.uid])
+        if isinstance(node.layer, Dense) and "w" in p:
+            if block is not None:
+                p["w"] = block_magnitude_prune(p["w"], sparsity, block)
+            else:
+                p["w"] = magnitude_prune(p["w"], sparsity)
+        out[node.uid] = p
+    return out
+
+
+def sparsity_of(w: jax.Array) -> float:
+    return float(jnp.mean(w == 0.0))
+
+
+# ---------------------------------------------------------------------------
+# §6.2 economics, reproduced analytically.  cost(check) vs cost(mac) ratios are
+# taken from the paper's WAGO measurements and let us reproduce its qualitative
+# conclusions without PLC hardware.
+# ---------------------------------------------------------------------------
+
+
+def skip_op_counts(
+    in_features: int,
+    units: int,
+    sparsity: float,
+    *,
+    quantized: bool,
+    check_inputs: bool = False,
+    input_sparsity: float = 0.0,
+) -> Dict[str, float]:
+    """Expected operation counts for IF-based skipping (§6.2).
+
+    Returns float ops, int ops and comparison ops; the benchmark converts
+    these to time with measured per-op costs to reproduce Fig-6.2's ordering
+    (skip hurts in float, helps under quantization, helps more with the
+    two-operand check).
+    """
+    n = in_features * units
+    checks = float(n)
+    executed = 1.0 - sparsity
+    if check_inputs:
+        checks += n * (1.0 - sparsity)  # second check short-circuits
+        executed *= 1.0 - input_sparsity
+    macs = n * executed
+    return {
+        "compare": checks,
+        "mac": macs,
+        "mac_dtype": "int" if quantized else "float",
+        "rescale_float_mul": in_features + units if quantized else 0,
+    }

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, ShardedDataset, SyntheticLM, read_shard, write_shard
+
+__all__ = ["DataConfig", "ShardedDataset", "SyntheticLM", "read_shard", "write_shard"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* :mod:`repro.kernels.qmatmul` — int8/int16 quantized matmul with fused
+  dequant epilogue (§6.1 quantization, MXU int8 path).
+* :mod:`repro.kernels.sparse_matmul` — block-sparse matmul skipping pruned
+  blocks (§6.2 operation skipping, made structural for the MXU).
+* :mod:`repro.kernels.ssd_scan` — Mamba-2 SSD chunked scan (assigned
+  mamba2/jamba architectures).
+
+``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import quantized_matmul, sparse_dense, ssd
+
+__all__ = ["ops", "ref", "quantized_matmul", "sparse_dense", "ssd"]

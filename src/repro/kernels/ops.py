@@ -1,0 +1,138 @@
+"""Jit'd public wrappers around the Pallas kernels, with shape handling,
+padding and automatic CPU fallback to the pure-jnp oracles.
+
+On this container (CPU) the kernels execute via ``interpret=True`` for
+validation; model code calls these wrappers with ``backend='auto'`` so that
+full-size runs use the oracle math (same numerics) while kernel tests pin
+``backend='pallas'``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prune import BlockSparseWeight
+from repro.kernels import ref
+from repro.kernels.qmatmul import qmatmul as _qmatmul_pallas
+from repro.kernels.sparse_matmul import sparse_matmul as _sparse_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Quantized matmul
+# ---------------------------------------------------------------------------
+
+
+def quantized_matmul(
+    xq: jax.Array,
+    wq: jax.Array,
+    scale: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    backend: str = "auto",
+    block: int = 128,
+) -> jax.Array:
+    """``(xq @ wq) * scale + bias`` with int accumulation, f32 out.
+
+    backend: 'auto' (pallas on TPU else oracle), 'pallas' (interpret off-TPU),
+    'ref'.
+    """
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        return ref.qmatmul_ref(xq, wq, scale, bias)
+    m, k = xq.shape
+    n = wq.shape[1]
+    xp = _pad_to(_pad_to(xq, 0, block), 1, block)
+    wp = _pad_to(_pad_to(wq, 0, block), 1, block)
+    scale_p = _pad_to(jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (n,)), 0, block)
+    bias_p = None if bias is None else _pad_to(bias, 0, block)
+    out = _qmatmul_pallas(
+        xp, wp, scale_p, bias_p,
+        block_m=min(block, xp.shape[0]),
+        block_n=block,
+        block_k=block,
+        interpret=not _on_tpu(),
+    )
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse matmul (pruning op-skip)
+# ---------------------------------------------------------------------------
+
+
+def sparse_dense(
+    x: jax.Array,
+    w: BlockSparseWeight,
+    *,
+    backend: str = "auto",
+) -> jax.Array:
+    """Pruned matmul skipping zero blocks entirely."""
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        return ref.sparse_matmul_ref(x, w)
+    return _sparse_pallas(x, w, interpret=not _on_tpu())
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (mamba2)
+# ---------------------------------------------------------------------------
+
+
+def ssd(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    *,
+    n_groups: int = 1,
+    chunk: int = 128,
+    backend: str = "auto",
+) -> jax.Array:
+    """Batched, grouped SSD scan.
+
+    Args:
+      x:  (B, T, H, P);  dt: (B, T, H);  a: (H,)
+      b/c: (B, T, G, N) with G groups broadcast over H heads.
+    Returns (B, T, H, P).
+    """
+    bsz, t, h, p = x.shape
+    g = b.shape[2]
+    reps = h // g
+    b_full = jnp.repeat(b, reps, axis=2)
+    c_full = jnp.repeat(c, reps, axis=2)
+
+    if backend == "ref":
+        return jax.vmap(ref.ssd_scan_ref, in_axes=(0, 0, None, 0, 0))(
+            x, dt, a, b_full, c_full
+        )
+    if backend in ("chunked",) or (backend == "auto" and not _on_tpu()):
+        ck = min(chunk, t) if t % min(chunk, t) == 0 else t
+        fn = functools.partial(ref.ssd_chunked_ref, chunk=ck)
+        return jax.vmap(fn, in_axes=(0, 0, None, 0, 0))(x, dt, a, b_full, c_full)
+
+    pad_t = (-t) % chunk
+    fn = functools.partial(_ssd_pallas, chunk=chunk, interpret=not _on_tpu())
+    xp = _pad_to(x, 1, chunk)
+    dtp = _pad_to(dt, 1, chunk)
+    bp = _pad_to(b_full, 1, chunk)
+    cp = _pad_to(c_full, 1, chunk)
+    y = jax.vmap(fn, in_axes=(0, 0, None, 0, 0))(xp, dtp, a, bp, cp)
+    return y[:, :t] if pad_t else y

@@ -1,0 +1,128 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the mathematically transparent implementation the kernels
+must match (asserted over shape/dtype sweeps in ``tests/test_kernels.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prune import BlockSparseWeight
+
+
+def qmatmul_ref(
+    xq: jax.Array,
+    wq: jax.Array,
+    scale: jax.Array,
+    bias: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Integer matmul + REAL rescale + bias, f32 out (§6.1 arithmetic)."""
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    out = acc.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def sparse_matmul_ref(x: jax.Array, w: BlockSparseWeight) -> jax.Array:
+    """Dense reference for the block-sparse matmul: x @ densify(w)."""
+    return x @ w.to_dense()
+
+
+def ssd_scan_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+) -> jax.Array:
+    """Sequential (step-by-step) SSD recurrence — the ground-truth scan.
+
+      S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * (x_t ⊗ B_t);  y_t = C_t · S_t
+    """
+    t, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                     # (H,P), (H,), (H,N), (H,N)
+        decay = jnp.exp(dtt * a)[:, None, None]   # (H,1,1)
+        state = decay * state + (dtt[:, None] * xt)[..., None] * bt[:, None, :]
+        yt = jnp.einsum("hpn,hn->hp", state, ct)
+        return state, yt
+
+    init = jnp.zeros((h, p, n), jnp.float32)
+    _, y = jax.lax.scan(step, init, (x, dt, b, c))
+    return y
+
+
+def ssd_chunked_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    chunk: int = 128,
+) -> jax.Array:
+    """Chunk-parallel SSD (the kernel's math, pure jnp).
+
+    Used as the FLOP-faithful train/prefill path on CPU: the intra-chunk work
+    is batched matmuls (what the Pallas kernel does per grid step) and only a
+    (H, P, N) state crosses chunks via a short ``lax.scan``.
+    """
+    t, h, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    xc = x.reshape(nc, chunk, h, p)
+    dtc = dt.reshape(nc, chunk, h)
+    bc = b.reshape(nc, chunk, h, n)
+    cc = c.reshape(nc, chunk, h, n)
+
+    alpha = dtc * a                                   # (nc, L, H)
+    s = jnp.cumsum(alpha, axis=1)                     # (nc, L, H)
+    s_tot = s[:, -1]                                  # (nc, H)
+
+    # Intra-chunk (no state dependency — fully parallel over chunks).
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    ds = s[:, :, None, :] - s[:, None, :, :]
+    decay = jnp.exp(jnp.where(mask[None, :, :, None], ds, -jnp.inf))
+    cb = jnp.einsum("clhn,cmhn->clmh", cc, bc)
+    y_intra = jnp.einsum("clmh,cmh,cmhp->clhp", decay * cb, dtc, xc)
+
+    # Chunk contributions to the carried state.
+    w = jnp.exp(s_tot[:, None, :] - s) * dtc          # (nc, L, H)
+    contrib = jnp.einsum("clh,clhp,clhn->chpn", w, xc, bc)
+
+    def carry(state, inp):
+        s_chunk, c_chunk, contrib_chunk, stot_chunk = inp
+        # inter-chunk output: prior state read through decayed C
+        y_inter = jnp.exp(s_chunk)[..., None] * jnp.einsum(
+            "lhn,hpn->lhp", c_chunk, state
+        )
+        state = jnp.exp(stot_chunk)[:, None, None] * state + contrib_chunk
+        return state, y_inter
+
+    init = jnp.zeros((h, p, n), jnp.float32)
+    _, y_inter = jax.lax.scan(carry, init, (s, cc, contrib, s_tot))
+    return (y_intra + y_inter).reshape(t, h, p)
+
+
+def ssd_update_ref(
+    state: jax.Array,
+    xt: jax.Array,
+    dtt: jax.Array,
+    a: jax.Array,
+    bt: jax.Array,
+    ct: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token SSD step (decode path): returns (new_state, y_t)."""
+    decay = jnp.exp(dtt * a)[:, None, None]
+    state = decay * state + (dtt[:, None] * xt)[..., None] * bt[:, None, :]
+    yt = jnp.einsum("hpn,hn->hp", state, ct)
+    return state, yt

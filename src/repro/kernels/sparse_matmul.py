@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: block-sparse matmul — the pruning 'operation skip' (§6.2).
+
+The paper shows per-element IF-skipping of zero weights only pays off when the
+check is cheap relative to the MAC.  A TPU MXU cannot predicate individual
+MACs, so the skip must be *structural*: the pruned weight matrix is stored as
+a list of nonzero (block_k × block_n) tiles plus their block coordinates, and
+the kernel grid iterates **only over nonzero blocks** — pruned blocks cost
+exactly zero FLOPs and zero HBM traffic.  This is the 'precompiled model'
+optimization the paper sketches in §8.1.
+
+Implementation: scalar-prefetch grid (PrefetchScalarGridSpec).  The block
+coordinate arrays live in SMEM and drive the BlockSpec index_maps, so the
+x-tile and out-tile for step ``s`` are chosen by data, not by affine grid
+math.  Blocks are pre-sorted by output column so each output tile is visited
+by one contiguous run of grid steps; the accumulator initializes on the first
+step of a run and writes through on every step (out stays resident in VMEM
+within a run — Pallas keeps revisited blocks live).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.prune import BlockSparseWeight
+
+
+def _sparse_kernel(
+    # scalar-prefetch operands (SMEM):
+    bi_ref,       # (nnz,) int32 — input-block row of step s
+    bj_ref,       # (nnz,) int32 — output-block col of step s
+    first_ref,    # (nnz,) int32 — 1 iff step s starts a new output tile
+    # tensor operands (VMEM):
+    x_ref,        # (bm, bk) f32 — activation tile for block row bi[s]
+    v_ref,        # (1, bk, bn) f32 — nonzero weight tile s
+    out_ref,      # (bm, bn) f32 — output tile for block col bj[s]
+):
+    s = pl.program_id(0)
+
+    @pl.when(first_ref[s] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        x_ref[...], v_ref[0], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "shape_n", "interpret"))
+def _sparse_matmul_impl(
+    x: jax.Array,
+    values: jax.Array,
+    bi: jax.Array,
+    bj: jax.Array,
+    first: jax.Array,
+    *,
+    block_m: int,
+    shape_n: int,
+    interpret: bool,
+) -> jax.Array:
+    m, k = x.shape
+    nnz, bk, bn = values.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nnz,),
+        in_specs=[
+            pl.BlockSpec((block_m, bk), lambda s, bi, bj, first: (0, bi[s])),
+            pl.BlockSpec((1, bk, bn), lambda s, bi, bj, first: (s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, bn), lambda s, bi, bj, first: (0, bj[s])),
+    )
+    return pl.pallas_call(
+        _sparse_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, shape_n), jnp.float32),
+        interpret=interpret,
+    )(bi, bj, first, x, values)
+
+
+def sparse_matmul(
+    x: jax.Array,
+    w: BlockSparseWeight,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """``out = x @ w`` where pruned (zero) blocks of ``w`` are skipped.
+
+    Note: output tiles with *no* nonzero blocks are never visited and retain
+    whatever was in the output buffer; callers must treat fully-pruned output
+    columns as zero.  ``ops.sparse_dense`` handles this by masking.
+
+    Args:
+      x: (M, K) f32 activations; M must match a single block_m tile here
+         (serving uses M = batch tile), K = w.shape[0].
+      w: plan-time block-sparse weight (sorted internally by output column).
+    """
+    n_rows, n_cols = w.shape
+    bk, bn = w.block
+    m = x.shape[0]
+    assert x.shape[1] == n_rows, (x.shape, w.shape)
+
+    # Sort blocks by output column so each out tile is a contiguous run.
+    order = np.lexsort((w.indices[:, 0], w.indices[:, 1]))
+    idx = w.indices[order]
+    values = w.values[jnp.asarray(order)]
+    bj = idx[:, 1]
+    first = np.ones_like(bj)
+    first[1:] = (bj[1:] != bj[:-1]).astype(bj.dtype)
+
+    out = _sparse_matmul_impl(
+        x,
+        values,
+        jnp.asarray(idx[:, 0], jnp.int32),
+        jnp.asarray(bj, jnp.int32),
+        jnp.asarray(first, jnp.int32),
+        block_m=m,
+        shape_n=n_cols,
+        interpret=interpret,
+    )
+    # Zero out columns whose block-column had no nonzero blocks at all.
+    # (Unvisited output tiles are uninitialized — possibly NaN — so select,
+    # don't multiply: NaN * 0 == NaN.)
+    present = np.zeros((n_cols // bn,), bool)
+    present[np.unique(bj)] = True
+    col_mask = jnp.asarray(np.repeat(present, bn))
+    return jnp.where(col_mask[None, :], out, 0.0)

@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e, 256 chips per pod (16×16), optionally 2 pods.
+Axes: ``data`` (batch / ZeRO), ``model`` (tensor/expert/context parallel),
+``pod`` (multi-pod data parallel outer axis).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    import numpy as np
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present; "
+            "the dry-run launcher sets xla_force_host_platform_device_count=512"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """A 1×1 mesh over the local device — smoke tests of the pjit path."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """The batch-parallel axes for this mesh ('pod' folds into data)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# v5e hardware constants used by the roofline analysis (benchmarks/roofline).
+PEAK_BF16_FLOPS = 197e12        # per chip
+PEAK_INT8_OPS = 394e12          # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~)
+HBM_BYTES = 16e9                # per chip

@@ -1,0 +1,232 @@
+"""Sharding rules: parameter, optimizer, batch, cache and activation layouts.
+
+Scheme (DESIGN.md §5):
+
+* **params** — tensor parallel on ``model``: qkv/up projections shard their
+  output dim, o/down projections their input dim, embeddings the vocab dim;
+  MoE experts shard the expert dim when divisible by the axis (else the FFN
+  hidden dim); norms/scales replicate.  The stacked leading layer axis is
+  never sharded.
+* **optimizer state** — mirrors params (ZeRO-style falls out for free).
+* **batch** — leading dim on ``("pod","data")`` (train) / ``("data",)``.
+* **KV caches (decode)** — *context parallel*: the sequence axis shards on
+  ``model`` (batch on ``data``); softmax/contraction collectives are inserted
+  by GSPMD.  For long_500k (batch=1) the sequence shards on both axes.
+* **SSM state** — heads on ``model``, batch on ``data``.
+* **activations** — constrained batch-sharded between blocks; MoE dispatch
+  tensors constrained expert-sharded (this materializes the all-to-all).
+
+Rules are name-based over pytree paths, so every architecture family is
+covered by one function.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import data_axes
+from repro.models import common as cm
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _model_dim_ok(mesh: Mesh, size: int) -> bool:
+    return size % _axis_size(mesh, "model") == 0
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg: ArchConfig,
+               mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf (path is '/'-joined keys)."""
+    rank = len(shape)
+    parts = path.split("/")
+    stacked = any(p.endswith("blocks") for p in parts)
+    # number of leading stacked axes (blocks/L; jamba sub-stacks add one more)
+    lead = 0
+    if stacked:
+        lead = 1
+        if any(k in path for k in ("mamba/", "mlp/", "moe/")) and cfg.family == "hybrid":
+            lead = 2
+
+    def pad(spec_tail: Tuple) -> P:
+        return P(*((None,) * lead + tuple(spec_tail)))
+
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    # ---- embeddings ----
+    if name == "emb":
+        return P("model", None)
+
+    # ---- MoE experts (E, d, f) / (E, f, d); router replicated ----
+    if parent == "ffn" or "/moe/" in path or path.endswith("router"):
+        if name == "router":
+            return pad((None, None))
+        if name in ("w_gate", "w_up", "w_down") and rank - lead == 3:
+            e = shape[lead]
+            if e % _axis_size(mesh, "model") == 0:
+                return pad(("model", None, None))
+            # expert count not divisible: shard the FFN hidden dim instead
+            if name == "w_down":
+                return pad((None, "model", None))
+            return pad((None, None, "model"))
+
+    # ---- attention / mlp / mamba projections ----
+    out_sharded = ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "fc1")
+    in_sharded = ("wo", "w_down", "out_proj", "fc2")
+    if name in ("w", "qw"):
+        owner = parent
+        if owner in out_sharded:
+            return pad((None, "model"))
+        if owner in in_sharded:
+            return pad(("model", None))
+    if name == "w_scale":
+        owner = parent
+        if owner in out_sharded:
+            return pad(("model",))
+        return pad((None,))
+    if name == "b":
+        owner = parent
+        if owner in out_sharded and rank - lead == 1:
+            return pad(("model",))
+        return pad((None,) * (rank - lead))
+
+    # ---- mamba conv/scalars, norms, everything else: replicated ----
+    return P(*((None,) * rank))
+
+
+def sanitize(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes from dims they do not divide (e.g. vocab 50280 on a
+    16-way axis): explicit in_shardings require exact divisibility, and
+    replicating an odd-sized embedding is cheaper than padding it."""
+    out = []
+    for d, ax in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        out.append(ax if shape[d] % size == 0 else None)
+    return P(*out)
+
+
+def param_shardings(specs: Any, cfg: ArchConfig, mesh: Mesh) -> Any:
+    """Map a pytree of ShapeDtypeStructs to NamedShardings."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(_path_str(path), tuple(leaf.shape), cfg, mesh)
+        out.append(NamedSharding(mesh, sanitize(spec, tuple(leaf.shape), mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_shardings(opt_specs: Any, p_shardings: Any, mesh: Mesh) -> Any:
+    """Optimizer state mirrors parameters; scalars replicate.
+
+    OptState = (step, mu, nu) with mu/nu shaped like params (f32) except
+    non-trainable leaves collapse to scalars."""
+    replicated = NamedSharding(mesh, P())
+
+    def match(moment_specs):
+        flat_p = jax.tree.leaves(p_shardings)
+        flat_m, treedef = jax.tree.flatten(moment_specs)
+        out = []
+        for ps, ms in zip(flat_p, flat_m):
+            out.append(ps if ms.ndim > 0 else replicated)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    import repro.optim as optim
+    return optim.OptState(step=replicated, mu=match(opt_specs.mu),
+                          nu=match(opt_specs.nu))
+
+
+def batch_shardings(batch_specs: Dict[str, Any], mesh: Mesh,
+                    *, batch_size: int) -> Dict[str, Any]:
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    lead = dp if batch_size % dp_size == 0 else (
+        ("data",) if batch_size % _axis_size(mesh, "data") == 0 else None)
+    out = {}
+    for k, s in batch_specs.items():
+        spec = sanitize(P(lead, *([None] * (len(s.shape) - 1))), s.shape, mesh)
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def cache_shardings(cache_specs: Any, cfg: ArchConfig, mesh: Mesh,
+                    *, batch_size: int) -> Any:
+    """Decode-cache layout (context parallel; see module docstring)."""
+    data_ok = batch_size % _axis_size(mesh, "data") == 0
+    b_ax = "data" if data_ok else None
+    # sequence axis sharding: model always; fold data in when batch can't use it
+    s_ax = "model" if data_ok else ("data", "model")
+    dp_all = data_axes(mesh)
+
+    def spec_for(path, leaf) -> P:
+        name = _path_str(path)
+        shape = leaf.shape
+        if name.endswith("ssm"):         # (L, [n_mamba,] B, H, P, N)
+            lead = len(shape) - 4
+            return P(*((None,) * lead), b_ax, "model", None, None)
+        if name.endswith("conv"):        # (L, [n_mamba,] B, K-1, C)
+            lead = len(shape) - 3
+            return P(*((None,) * lead), b_ax, None, "model")
+        if name.endswith(("xk", "xv")):  # whisper cross KV: (L, B, F, K, D)
+            return P(None, b_ax, None, None, None)
+        if name.endswith(("k_scale", "v_scale")):  # int8 KV scales (L,B,S,K)
+            return P(None, b_ax, s_ax, None)
+        # attention KV: (L, B, S, K, D)
+        return P(None, b_ax, s_ax, None, None)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs)
+    out = [NamedSharding(mesh, sanitize(spec_for(p, l), tuple(l.shape), mesh))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (installed as the models' constrain hook)
+# ---------------------------------------------------------------------------
+
+
+def activation_hook(mesh: Mesh, *, batch_sharded: bool,
+                    seq_parallel: bool = False):
+    dp = data_axes(mesh)
+
+    def hook(x: jax.Array, name: str) -> jax.Array:
+        if name == "btd" and x.ndim == 3 and batch_sharded:
+            # Megatron-style sequence parallelism: between blocks the
+            # activation also shards its sequence dim on "model", turning the
+            # per-block TP all-reduce into reduce-scatter + all-gather.
+            seq_ax = "model" if (seq_parallel and x.shape[1] %
+                                 _axis_size(mesh, "model") == 0) else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, seq_ax, None)))
+        if name == "expert_in" and x.ndim == 4:
+            e = x.shape[1]
+            if e % _axis_size(mesh, "model") == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(dp if batch_sharded else None,
+                                             "model", None, None)))
+        return x
+
+    return hook
+
+
+def install_hook(mesh: Optional[Mesh], *, batch_sharded: bool = True,
+                 seq_parallel: bool = False) -> None:
+    if mesh is None:
+        cm.set_constrain_hook(None)
+    else:
+        cm.set_constrain_hook(activation_hook(
+            mesh, batch_sharded=batch_sharded, seq_parallel=seq_parallel))

@@ -1,0 +1,48 @@
+"""Jitted train / serve steps with explicit shardings.
+
+``make_train_step``/``make_prefill``/``make_decode_step`` return functions
+ready for ``jax.jit(..., in_shardings=..., out_shardings=...)``; the dry-run
+lowers them against ShapeDtypeStruct stand-ins and the real launchers execute
+them.  Buffers that must never be duplicated (optimizer state, KV caches) are
+donated — the ICSML static-memory discipline at cluster scale.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelAPI
+from repro.optim import adamw, apply_updates, global_norm, linear_warmup_cosine
+
+
+def make_optimizer(lr: float = 3e-4, warmup: int = 100, steps: int = 10_000):
+    return adamw(linear_warmup_cosine(lr, warmup, steps))
+
+
+def make_train_step(api: ModelAPI, opt_update) -> Callable:
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(api.loss)(params, batch)
+        updates, opt_state = opt_update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill(api: ModelAPI, cache_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(api: ModelAPI) -> Callable:
+    def decode_step(params, cache, batch, pos):
+        return api.decode(params, cache, batch, pos)
+
+    return decode_step

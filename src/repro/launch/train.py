@@ -1,0 +1,106 @@
+"""Training launcher: end-to-end distributed training of any assigned
+architecture (reduced or full) on whatever mesh the host provides.
+
+Examples (CPU container — reduced configs):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_8b --reduced \\
+      --steps 20 --batch 8 --seq 128
+
+On a real v5e pod the same entry point runs the full config on the
+(16,16) production mesh (``--production-mesh``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore, save
+from repro.configs.base import ARCH_IDS, get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_optimizer, make_train_step
+from repro.models.api import get_model
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = get_model(cfg)
+
+    mesh = (make_production_mesh() if args.production_mesh else make_host_mesh())
+    sh.install_hook(mesh, batch_sharded=True)
+
+    params = api.init(jax.random.PRNGKey(args.seed))
+    opt_init, opt_update = make_optimizer(args.lr, args.warmup, args.steps)
+    opt_state = opt_init(params)
+
+    p_shard = sh.param_shardings(api.param_specs(), cfg, mesh)
+    params = jax.device_put(params, p_shard)
+
+    step_fn = jax.jit(make_train_step(api, opt_update), donate_argnums=(0, 1))
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch, seed=args.seed))
+    stream = data.batches()
+
+    if args.ckpt_dir:
+        import os
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+
+    t0 = time.time()
+    losses = []
+    for step in range(args.steps):
+        host_batch = next(stream)
+        batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
+        if cfg.family == "vlm":
+            b, s = batch["tokens"].shape
+            text = max(s - cfg.num_image_tokens, 1)
+            batch = {
+                "tokens": batch["tokens"][:, :text],
+                "labels": batch["labels"][:, :text],
+                "image_emb": jnp.zeros((b, cfg.num_image_tokens, 1152), cfg.dtype),
+            }
+        elif cfg.family == "audio":
+            b = batch["tokens"].shape[0]
+            batch["frames"] = jnp.zeros((b, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({dt / (step + 1):.2f}s/step)", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save(args.ckpt_dir, step + 1, {"params": params})
+
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}); "
+          f"{(time.time() - t0):.1f}s total")
+    sh.install_hook(None)
+
+
+if __name__ == "__main__":
+    main()

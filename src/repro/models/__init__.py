@@ -1,0 +1,5 @@
+"""Architecture backbones for the assigned model pool (DESIGN.md §4)."""
+
+from repro.models.api import ModelAPI, get_model
+
+__all__ = ["ModelAPI", "get_model"]

@@ -1,0 +1,178 @@
+"""Uniform model API over all architecture families.
+
+``get_model(cfg)`` returns a :class:`ModelAPI` whose five functions have the
+same signatures for every family, so the launcher, dry-run, serving engine and
+smoke tests are architecture-agnostic:
+
+  init(key) -> params
+  loss(params, batch) -> scalar                       (train)
+  prefill(params, batch, cache_len) -> (cache, logits)
+  decode(params, cache, batch, pos) -> (cache, logits)
+  cache_specs(batch, cache_len) -> pytree of ShapeDtypeStruct
+
+Batch layouts per family (``batch_specs`` builds ShapeDtypeStruct stand-ins;
+the data pipeline builds real ones):
+
+  dense/moe/ssm/hybrid: {tokens (B,S), labels (B,S)}
+  vlm:  {tokens (B,S-I), labels (B,S-I), image_emb (B,I,VISION_D)}  (stub)
+  audio:{tokens (B,S), labels (B,S), frames (B,F,d_model)}          (stub)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import hybrid, mamba2, moe, transformer, vlm, whisper
+
+Params = Dict[str, Any]
+Batch = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Params]
+    param_specs: Callable[[], Any]
+    loss: Callable[[Params, Batch], jax.Array]
+    prefill: Callable[[Params, Batch, int], Tuple[Any, jax.Array]]
+    decode: Callable[[Params, Any, Batch, jax.Array], Tuple[Any, jax.Array]]
+    cache_specs: Callable[[int, int], Any]
+    init_cache: Callable[[int, int], Any]
+    batch_specs: Callable[[str, int, int], Batch]
+
+    def init_batch(self, kind: str, batch: int, seq: int, key: jax.Array) -> Batch:
+        """Random concrete batch matching batch_specs (smoke tests/examples)."""
+        specs = self.batch_specs(kind, batch, seq)
+        out = {}
+        for name, s in specs.items():
+            key, k = jax.random.split(key)
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                out[name] = jax.random.randint(k, s.shape, 0, self.cfg.vocab, s.dtype)
+            else:
+                out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+        return out
+
+
+def _token_batch_specs(cfg: ArchConfig):
+    def specs(kind: str, batch: int, seq: int) -> Batch:
+        if kind == "train":
+            return {
+                "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            }
+        if kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    return specs
+
+
+def _vlm_batch_specs(cfg: ArchConfig):
+    def specs(kind: str, batch: int, seq: int) -> Batch:
+        img = jax.ShapeDtypeStruct((batch, cfg.num_image_tokens, vlm.VISION_D),
+                                   cfg.dtype)
+        text = max(seq - cfg.num_image_tokens, 1)
+        if kind == "train":
+            return {
+                "tokens": jax.ShapeDtypeStruct((batch, text), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((batch, text), jnp.int32),
+                "image_emb": img,
+            }
+        if kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((batch, text), jnp.int32),
+                    "image_emb": img}
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    return specs
+
+
+def _audio_batch_specs(cfg: ArchConfig):
+    def specs(kind: str, batch: int, seq: int) -> Batch:
+        frames = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+        if kind == "train":
+            return {
+                "frames": frames,
+                "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            }
+        if kind == "prefill":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    return specs
+
+
+def get_model(cfg: ArchConfig) -> ModelAPI:
+    fam = cfg.family
+
+    if fam in ("dense",):
+        mod = transformer
+        init = lambda k: transformer.decoder_init(k, cfg)
+        spec = lambda: transformer.decoder_spec(cfg)
+        loss = lambda p, b: transformer.loss_fn(p, cfg, b)
+        pre = lambda p, b, cl: transformer.prefill(p, cfg, b["tokens"], cl)
+        dec = lambda p, c, b, pos: transformer.decode_step(p, cfg, c, b["tokens"], pos)
+        cspec = lambda bsz, cl: transformer.cache_spec(cfg, bsz, cl)
+        icache = lambda bsz, cl: transformer.init_cache(cfg, bsz, cl)
+        bspec = _token_batch_specs(cfg)
+    elif fam == "moe":
+        init = lambda k: moe.model_init(k, cfg)
+        spec = lambda: moe.model_spec(cfg)
+        loss = lambda p, b: moe.loss_fn(p, cfg, b)
+        pre = lambda p, b, cl: moe.prefill(p, cfg, b["tokens"], cl)
+        dec = lambda p, c, b, pos: moe.decode_step(p, cfg, c, b["tokens"], pos)
+        cspec = lambda bsz, cl: moe.cache_spec(cfg, bsz, cl)
+        icache = lambda bsz, cl: moe.init_cache(cfg, bsz, cl)
+        bspec = _token_batch_specs(cfg)
+    elif fam == "ssm":
+        init = lambda k: mamba2.model_init(k, cfg)
+        spec = lambda: mamba2.model_spec(cfg)
+        loss = lambda p, b: mamba2.loss_fn(p, cfg, b)
+        pre = lambda p, b, cl: mamba2.prefill(p, cfg, b["tokens"], cl)
+        dec = lambda p, c, b, pos: mamba2.decode_step(p, cfg, c, b["tokens"], pos)
+        cspec = lambda bsz, cl: mamba2.cache_spec(cfg, bsz, cl)
+        icache = lambda bsz, cl: mamba2.init_cache(cfg, bsz, cl)
+        bspec = _token_batch_specs(cfg)
+    elif fam == "hybrid":
+        init = lambda k: hybrid.model_init(k, cfg)
+        spec = lambda: hybrid.model_spec(cfg)
+        loss = lambda p, b: hybrid.loss_fn(p, cfg, b)
+        pre = lambda p, b, cl: hybrid.prefill(p, cfg, b["tokens"], cl)
+        dec = lambda p, c, b, pos: hybrid.decode_step(p, cfg, c, b["tokens"], pos)
+        cspec = lambda bsz, cl: hybrid.cache_spec(cfg, bsz, cl)
+        icache = lambda bsz, cl: hybrid.init_cache(cfg, bsz, cl)
+        bspec = _token_batch_specs(cfg)
+    elif fam == "vlm":
+        init = lambda k: vlm.model_init(k, cfg)
+        spec = lambda: vlm.model_spec(cfg)
+        loss = lambda p, b: vlm.loss_fn(p, cfg, b)
+        pre = lambda p, b, cl: vlm.prefill(p, cfg, b, cl)
+        dec = lambda p, c, b, pos: vlm.decode_step(p, cfg, c, b["tokens"], pos)
+        cspec = lambda bsz, cl: vlm.cache_spec(cfg, bsz, cl)
+        icache = lambda bsz, cl: vlm.init_cache(cfg, bsz, cl)
+        bspec = _vlm_batch_specs(cfg)
+    elif fam == "audio":
+        init = lambda k: whisper.model_init(k, cfg)
+        spec = lambda: whisper.model_spec(cfg)
+        loss = lambda p, b: whisper.loss_fn(p, cfg, b)
+        pre = lambda p, b, cl: whisper.prefill(p, cfg, b["frames"], b["tokens"], cl)
+        dec = lambda p, c, b, pos: whisper.decode_step(p, cfg, c, b["tokens"], pos)
+        cspec = lambda bsz, cl: whisper.cache_spec(cfg, bsz, cl)
+        icache = lambda bsz, cl: whisper.init_cache(cfg, bsz, cl)
+        bspec = _audio_batch_specs(cfg)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    def param_specs():
+        return jax.eval_shape(init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    return ModelAPI(
+        cfg=cfg, init=init, param_specs=param_specs, loss=loss,
+        prefill=pre, decode=dec, cache_specs=cspec, init_cache=icache,
+        batch_specs=bspec,
+    )

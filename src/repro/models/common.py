@@ -1,0 +1,399 @@
+"""Shared transformer primitives for the assigned architectures.
+
+Everything here is pure JAX (pjit-compatible; distribution is applied by
+`repro.launch.shardings` via NamedSharding on the inputs/params and
+`with_sharding_constraint` on activations).  Conventions:
+
+* params are dicts of arrays; per-layer params are **stacked** on a leading
+  layer axis and consumed with ``jax.lax.scan`` so the HLO stays compact for
+  the 512-device dry-runs (96-layer models compile as one block).
+* activations compute in ``cfg.dtype`` (bf16), reductions/softmax in f32.
+* KV caches are statically preallocated at the serving shape and threaded
+  functionally — the ICSML static-memory discipline (DESIGN.md §2).
+* all linear layers route through :func:`linear`, which dispatches to the
+  paper's int8 quantized path (``repro.kernels``) when the params carry
+  quantized weights — this is how §6.1 quantization becomes a first-class
+  serving feature for every architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding hook.  `repro.launch.shardings` installs a function
+# mapping (array, logical_name) -> with_sharding_constraint(array, ...);
+# outside a mesh context this is the identity.  Models stay mesh-agnostic.
+# ---------------------------------------------------------------------------
+
+_CONSTRAIN_HOOK = None
+
+
+def set_constrain_hook(fn) -> None:
+    global _CONSTRAIN_HOOK
+    _CONSTRAIN_HOOK = fn
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    if _CONSTRAIN_HOOK is None:
+        return x
+    return _CONSTRAIN_HOOK(x, name)
+
+
+# ---------------------------------------------------------------------------
+# Linear / norm / embedding
+# ---------------------------------------------------------------------------
+
+
+def linear_spec(d_in: int, d_out: int, *, bias: bool, quant: Optional[str],
+                dtype=jnp.bfloat16) -> Params:
+    """ShapeDtypeStruct tree for one linear layer (dry-run, no allocation)."""
+    if quant is None:
+        p = {"w": jax.ShapeDtypeStruct((d_in, d_out), dtype)}
+    else:
+        from repro.core.layers import IEC_INT_TYPES
+        p = {
+            "qw": jax.ShapeDtypeStruct((d_in, d_out), jnp.dtype(IEC_INT_TYPES[quant])),
+            "w_scale": jax.ShapeDtypeStruct((d_out,), jnp.float32),
+            "x_scale": jax.ShapeDtypeStruct((), jnp.float32),
+        }
+    if bias:
+        p["b"] = jax.ShapeDtypeStruct((d_out,), jnp.float32)
+    return p
+
+
+def linear_init(key: jax.Array, d_in: int, d_out: int, *, bias: bool,
+                quant: Optional[str], dtype=jnp.bfloat16, scale: float = 1.0) -> Params:
+    std = scale / np.sqrt(d_in)
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+    if quant is None:
+        p = {"w": w}
+    else:
+        from repro.core.quantize import quantize_tensor
+        qt = quantize_tensor(w.astype(jnp.float32), quant)
+        p = {"qw": qt.q, "w_scale": qt.scale,
+             "x_scale": jnp.asarray(1.0 / 127.0, jnp.float32)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    """Apply a (possibly int-quantized) linear layer to (..., d_in)."""
+    if "qw" in p:
+        qw = p["qw"]
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        info = jnp.iinfo(qw.dtype)
+        xq = jnp.clip(jnp.round(x2 / p["x_scale"]), info.min, info.max).astype(qw.dtype)
+        y = kops.quantized_matmul(
+            xq, qw, p["x_scale"] * p["w_scale"], p.get("b")
+        )
+        return y.reshape(*lead, qw.shape[-1]).astype(x.dtype)
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_spec(d: int) -> Params:
+    return {"g": jax.ShapeDtypeStruct((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (n * p["g"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (B, S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Grouped-query attention (full / causal / sliding-window; qk-norm option)
+# ---------------------------------------------------------------------------
+
+
+def gqa_scores_mask(
+    q_pos: jax.Array,        # (Sq,) query positions
+    k_pos: jax.Array,        # (Sk,) key positions
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    """Boolean (Sq, Sk) attention mask."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return ok
+
+
+def gqa_attention(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, K, D)
+    v: jax.Array,            # (B, Sk, K, D)
+    mask: jax.Array,         # (Sq, Sk) bool
+) -> jax.Array:
+    """Grouped-query attention; softmax in f32. Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, sq, kheads, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(d)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    qk_norm: bool = False
+    bias: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None     # sliding window (tokens), None = full
+    d_head: Optional[int] = None     # defaults to d_model // n_heads
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+
+def attn_spec(a: AttnConfig, quant: Optional[str], dtype=jnp.bfloat16) -> Params:
+    d_head = a.head_dim
+    p = {
+        "wq": linear_spec(a.d_model, a.n_heads * d_head, bias=a.bias, quant=quant, dtype=dtype),
+        "wk": linear_spec(a.d_model, a.n_kv_heads * d_head, bias=a.bias, quant=quant, dtype=dtype),
+        "wv": linear_spec(a.d_model, a.n_kv_heads * d_head, bias=a.bias, quant=quant, dtype=dtype),
+        "wo": linear_spec(a.n_heads * d_head, a.d_model, bias=a.bias, quant=quant, dtype=dtype),
+    }
+    if a.qk_norm:
+        p["q_norm"] = rmsnorm_spec(d_head)
+        p["k_norm"] = rmsnorm_spec(d_head)
+    return p
+
+
+def attn_init(key: jax.Array, a: AttnConfig, quant: Optional[str],
+              dtype=jnp.bfloat16) -> Params:
+    d_head = a.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(ks[0], a.d_model, a.n_heads * d_head, bias=a.bias, quant=quant, dtype=dtype),
+        "wk": linear_init(ks[1], a.d_model, a.n_kv_heads * d_head, bias=a.bias, quant=quant, dtype=dtype),
+        "wv": linear_init(ks[2], a.d_model, a.n_kv_heads * d_head, bias=a.bias, quant=quant, dtype=dtype),
+        "wo": linear_init(ks[3], a.n_heads * d_head, a.d_model, bias=a.bias, quant=quant, dtype=dtype),
+    }
+    if a.qk_norm:
+        p["q_norm"] = rmsnorm_init(d_head)
+        p["k_norm"] = rmsnorm_init(d_head)
+    return p
+
+
+def attn_qkv(p: Params, a: AttnConfig, x: jax.Array, positions: jax.Array
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    d_head = a.head_dim
+    q = linear(p["wq"], x).reshape(b, s, a.n_heads, d_head)
+    k = linear(p["wk"], x).reshape(b, s, a.n_kv_heads, d_head)
+    v = linear(p["wv"], x).reshape(b, s, a.n_kv_heads, d_head)
+    if a.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, a.rope_theta)
+    k = apply_rope(k, positions, a.rope_theta)
+    return q, k, v
+
+
+def attn_forward(
+    p: Params, a: AttnConfig, x: jax.Array, positions: jax.Array,
+    *, window_override: Optional[int] = None,
+) -> jax.Array:
+    """Full-sequence (train/prefill) attention."""
+    window = window_override if window_override is not None else a.window
+    q, k, v = attn_qkv(p, a, x, positions)
+    mask = gqa_scores_mask(positions, positions, causal=True, window=window)
+    out = gqa_attention(q, k, v, mask)
+    return linear(p["wo"], out.reshape(*x.shape[:2], -1))
+
+
+def attn_prefill(
+    p: Params, a: AttnConfig, x: jax.Array, positions: jax.Array,
+    cache_len: int, *, window_override: Optional[int] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Prefill: returns output and (k_cache, v_cache) padded to cache_len."""
+    window = window_override if window_override is not None else a.window
+    q, k, v = attn_qkv(p, a, x, positions)
+    mask = gqa_scores_mask(positions, positions, causal=True, window=window)
+    out = gqa_attention(q, k, v, mask)
+    s = x.shape[1]
+    pad = [(0, 0), (0, cache_len - s), (0, 0), (0, 0)]
+    return (
+        linear(p["wo"], out.reshape(*x.shape[:2], -1)),
+        (jnp.pad(k, pad), jnp.pad(v, pad)),
+    )
+
+
+def attn_decode(
+    p: Params, a: AttnConfig, x: jax.Array, pos: jax.Array,
+    cache: Tuple[jax.Array, ...],
+    *, window_override: Optional[int] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """One-token decode against a static cache.
+
+    x: (B, 1, d_model); pos: () current position; cache either
+    ``(k, v)`` with k/v (B, Smax, K, D) in compute dtype, or the int8
+    variant ``(k_q, v_q, k_scale, v_scale)`` with per-(token, head) REAL
+    scales — §6.1 quantization applied to serving state (kv_quant).
+    The cache is updated functionally (donated by the caller's jit).
+    """
+    window = window_override if window_override is not None else a.window
+    b = x.shape[0]
+    q, k, v = attn_qkv(p, a, x, jnp.full((1,), pos, jnp.int32))
+    quantized = len(cache) == 4
+
+    if quantized:
+        k_cache, v_cache, ks_cache, vs_cache = cache
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, kq, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, vq, (0, pos, 0, 0))
+        ks_cache = jax.lax.dynamic_update_slice(ks_cache, ks, (0, pos, 0))
+        vs_cache = jax.lax.dynamic_update_slice(vs_cache, vs, (0, pos, 0))
+        k_full = k_cache.astype(q.dtype) * ks_cache[..., None].astype(q.dtype)
+        v_full = v_cache.astype(q.dtype) * vs_cache[..., None].astype(q.dtype)
+        new_cache: Tuple[jax.Array, ...] = (k_cache, v_cache, ks_cache, vs_cache)
+    else:
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0, 0))
+        k_full, v_full = k_cache, v_cache
+        new_cache = (k_cache, v_cache)
+
+    s_max = k_full.shape[1]
+    k_pos = jnp.arange(s_max, dtype=jnp.int32)
+    mask = (k_pos <= pos)
+    if window is not None:
+        mask &= k_pos > pos - window
+    mask2d = mask[None, :]  # (1, Smax)
+    out = gqa_attention(q, k_full, v_full, mask2d)
+    return linear(p["wo"], out.reshape(b, 1, -1)), new_cache
+
+
+def _quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 per-(token, head) quantization of K/V (B, S, K, D)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-6) / 127.0               # (B, S, K)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -128, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    d_model: int
+    d_ff: int
+    kind: str = "swiglu"      # 'swiglu' | 'gelu' | 'squared_relu'
+    bias: bool = False
+
+
+def mlp_spec(m: MlpConfig, quant: Optional[str], dtype=jnp.bfloat16) -> Params:
+    p = {}
+    if m.kind == "swiglu":
+        p["w_gate"] = linear_spec(m.d_model, m.d_ff, bias=m.bias, quant=quant, dtype=dtype)
+    p["w_up"] = linear_spec(m.d_model, m.d_ff, bias=m.bias, quant=quant, dtype=dtype)
+    p["w_down"] = linear_spec(m.d_ff, m.d_model, bias=m.bias, quant=quant, dtype=dtype)
+    return p
+
+
+def mlp_init(key: jax.Array, m: MlpConfig, quant: Optional[str],
+             dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {}
+    if m.kind == "swiglu":
+        p["w_gate"] = linear_init(ks[2], m.d_model, m.d_ff, bias=m.bias, quant=quant, dtype=dtype)
+    p["w_up"] = linear_init(ks[0], m.d_model, m.d_ff, bias=m.bias, quant=quant, dtype=dtype)
+    p["w_down"] = linear_init(ks[1], m.d_ff, m.d_model, bias=m.bias, quant=quant, dtype=dtype)
+    return p
+
+
+def mlp_forward(p: Params, m: MlpConfig, x: jax.Array) -> jax.Array:
+    if m.kind == "swiglu":
+        h = jax.nn.silu(linear(p["w_gate"], x)) * linear(p["w_up"], x)
+    elif m.kind == "gelu":
+        h = jax.nn.gelu(linear(p["w_up"], x))
+    elif m.kind == "squared_relu":   # nemotron-4 [arXiv:2402.16819]
+        h = jnp.square(jax.nn.relu(linear(p["w_up"], x)))
+    else:
+        raise ValueError(m.kind)
+    return linear(p["w_down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(vocab: int, d: int, dtype=jnp.bfloat16) -> Params:
+    return {"emb": jax.ShapeDtypeStruct((vocab, d), dtype)}
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.bfloat16) -> Params:
+    return {"emb": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return p["emb"][tokens]
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits in f32 for a stable softmax/loss."""
+    return jnp.einsum("bsd,vd->bsv", x, p["emb"]).astype(jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; logits (B, S, V) f32, labels (B, S) int32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,240 @@
+"""Jamba-style hybrid: Mamba + attention 1:7 interleave with MoE
+[arXiv:2403.19887].
+
+The 72 layers are 9 homogeneous *super-blocks* of ``attn_period`` (8)
+sublayers — attention at position 3, Mamba elsewhere; the FFN after each
+mixer alternates dense MLP (even positions) / MoE 16e top-2 (odd positions).
+The outer ``lax.scan`` runs over super-blocks (homogeneous params), the inner
+8 sublayers are unrolled — HLO stays compact while matching the published
+interleave.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import mamba2 as mb
+from repro.models import moe as moelib
+from repro.models.transformer import _attn_cfg, _mlp_cfg, stacked_specs
+
+Params = Dict[str, Any]
+
+
+def _layout(cfg: ArchConfig):
+    period = cfg.attn_period
+    attn_pos = period // 2 - 1          # position 3 of 8 (jamba layout)
+    n_super = cfg.n_layers // period
+    n_mamba = period - 1
+    n_moe = period // 2                 # odd positions
+    n_mlp = period - n_moe
+    return period, attn_pos, n_super, n_mamba, n_moe, n_mlp
+
+
+def _take(tree: Params, i: int) -> Params:
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def super_block_spec(cfg: ArchConfig) -> Params:
+    period, attn_pos, n_super, n_mamba, n_moe, n_mlp = _layout(cfg)
+    return {
+        "mamba": stacked_specs(
+            {"ln": cm.rmsnorm_spec(cfg.d_model), "mixer": mb.mamba_spec(cfg)},
+            n_mamba),
+        "attn": {"ln": cm.rmsnorm_spec(cfg.d_model),
+                 "attn": cm.attn_spec(_attn_cfg(cfg), cfg.quant, cfg.dtype)},
+        "mlp": stacked_specs(
+            {"ln": cm.rmsnorm_spec(cfg.d_model),
+             "mlp": cm.mlp_spec(_mlp_cfg(cfg), cfg.quant, cfg.dtype)},
+            n_mlp),
+        "moe": stacked_specs(
+            {"ln": cm.rmsnorm_spec(cfg.d_model), "moe": moelib.moe_spec(cfg)},
+            n_moe),
+    }
+
+
+def super_block_init(key: jax.Array, cfg: ArchConfig) -> Params:
+    period, attn_pos, n_super, n_mamba, n_moe, n_mlp = _layout(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def mamba_one(k):
+        return {"ln": cm.rmsnorm_init(cfg.d_model), "mixer": mb.mamba_init(k, cfg)}
+
+    def mlp_one(k):
+        return {"ln": cm.rmsnorm_init(cfg.d_model),
+                "mlp": cm.mlp_init(k, _mlp_cfg(cfg), cfg.quant, cfg.dtype)}
+
+    def moe_one(k):
+        return {"ln": cm.rmsnorm_init(cfg.d_model), "moe": moelib.moe_init(k, cfg)}
+
+    return {
+        "mamba": jax.vmap(mamba_one)(jax.random.split(k1, n_mamba)),
+        "attn": {"ln": cm.rmsnorm_init(cfg.d_model),
+                 "attn": cm.attn_init(k2, _attn_cfg(cfg), cfg.quant, cfg.dtype)},
+        "mlp": jax.vmap(mlp_one)(jax.random.split(k3, n_mlp)),
+        "moe": jax.vmap(moe_one)(jax.random.split(k4, n_moe)),
+    }
+
+
+def model_spec(cfg: ArchConfig) -> Params:
+    _, _, n_super, *_ = _layout(cfg)
+    return {
+        "embed": cm.embed_spec(cfg.vocab, cfg.d_model, cfg.dtype),
+        "blocks": stacked_specs(super_block_spec(cfg), n_super),
+        "final_norm": cm.rmsnorm_spec(cfg.d_model),
+    }
+
+
+def model_init(key: jax.Array, cfg: ArchConfig) -> Params:
+    _, _, n_super, *_ = _layout(cfg)
+    k_emb, k_blocks = jax.random.split(key)
+    return {
+        "embed": cm.embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "blocks": jax.vmap(lambda k: super_block_init(k, cfg))(
+            jax.random.split(k_blocks, n_super)),
+        "final_norm": cm.rmsnorm_init(cfg.d_model),
+    }
+
+
+def _ffn(sb: Params, cfg: ArchConfig, i: int, h: jax.Array) -> jax.Array:
+    if i % 2 == 1:
+        p = _take(sb["moe"], i // 2)
+        return moelib.moe_forward(p["moe"], cfg, cm.rmsnorm(p["ln"], h))
+    p = _take(sb["mlp"], i // 2)
+    return cm.mlp_forward(p["mlp"], _mlp_cfg(cfg), cm.rmsnorm(p["ln"], h))
+
+
+def super_block_forward(sb: Params, cfg: ArchConfig, x: jax.Array,
+                        positions: jax.Array) -> jax.Array:
+    period, attn_pos, *_ = _layout(cfg)
+    mamba_j = 0
+    for i in range(period):
+        if i == attn_pos:
+            h = cm.rmsnorm(sb["attn"]["ln"], x)
+            x = x + cm.attn_forward(sb["attn"]["attn"], _attn_cfg(cfg), h, positions)
+        else:
+            p = _take(sb["mamba"], mamba_j)
+            x = x + mb.mamba_forward(p["mixer"], cfg, cm.rmsnorm(p["ln"], x))
+            mamba_j += 1
+        x = x + _ffn(sb, cfg, i, x)
+        x = cm.constrain(x, "btd")
+    return x
+
+
+def forward_logits(params: Params, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(h, sb):
+        return super_block_forward(sb, cfg, h, positions), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "layer" else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"], unroll=cfg.scan_unroll)
+    return cm.unembed(params["embed"], cm.rmsnorm(params["final_norm"], x))
+
+
+def loss_fn(params, cfg, batch):
+    return cm.cross_entropy(forward_logits(params, cfg, batch["tokens"]),
+                            batch["labels"])
+
+
+# -- serving ---------------------------------------------------------------
+
+
+def cache_spec(cfg: ArchConfig, batch: int, cache_len: int) -> Dict[str, Any]:
+    period, attn_pos, n_super, n_mamba, *_ = _layout(cfg)
+    kv = (n_super, batch, cache_len, cfg.n_kv_heads, cfg.d_head)
+    mamba_one = mb.mamba_cache_spec(cfg, batch)
+    return {
+        "k": jax.ShapeDtypeStruct(kv, cfg.dtype),
+        "v": jax.ShapeDtypeStruct(kv, cfg.dtype),
+        "mamba": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_super, n_mamba) + s.shape, s.dtype),
+            mamba_one),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, cache_len))
+
+
+def super_block_decode(sb: Params, cfg: ArchConfig, x: jax.Array,
+                       pos: jax.Array, kv, mamba_cache
+                       ) -> Tuple[jax.Array, Any, Any]:
+    period, attn_pos, *_ = _layout(cfg)
+    mamba_j = 0
+    new_conv, new_ssm = [], []
+    for i in range(period):
+        if i == attn_pos:
+            h = cm.rmsnorm(sb["attn"]["ln"], x)
+            a, kv = cm.attn_decode(sb["attn"]["attn"], _attn_cfg(cfg), h, pos, kv)
+            x = x + a
+        else:
+            p = _take(sb["mamba"], mamba_j)
+            c = jax.tree.map(lambda a: a[mamba_j], mamba_cache)
+            out, c2 = mb.mamba_decode(p["mixer"], cfg, cm.rmsnorm(p["ln"], x), c)
+            new_conv.append(c2["conv"])
+            new_ssm.append(c2["ssm"])
+            x = x + out
+            mamba_j += 1
+        x = x + _ffn(sb, cfg, i, x)
+    new_mamba = {"conv": jnp.stack(new_conv), "ssm": jnp.stack(new_ssm)}
+    return x, kv, new_mamba
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                tokens: jax.Array, pos: jax.Array
+                ) -> Tuple[Dict[str, Any], jax.Array]:
+    x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+
+    def body(h, inputs):
+        sb, kc, vc, mc = inputs
+        h, (kc, vc), mc = super_block_decode(sb, cfg, h, pos, (kc, vc), mc)
+        return h, (kc, vc, mc)
+
+    x, (k, v, mamba) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"], cache["mamba"]),
+        unroll=cfg.scan_unroll,
+    )
+    x = cm.rmsnorm(params["final_norm"], x)
+    return {"k": k, "v": v, "mamba": mamba}, cm.unembed(params["embed"], x)
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jax.Array, cache_len: int
+            ) -> Tuple[Dict[str, Any], jax.Array]:
+    """Prefill: full forward collecting attention KV + final mamba states."""
+    period, attn_pos, *_ = _layout(cfg)
+    x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(h, sb):
+        mamba_j = 0
+        convs, ssms = [], []
+        kv = None
+        for i in range(period):
+            if i == attn_pos:
+                hn = cm.rmsnorm(sb["attn"]["ln"], h)
+                a, kv = cm.attn_prefill(sb["attn"]["attn"], _attn_cfg(cfg),
+                                        hn, positions, cache_len)
+                h = h + a
+            else:
+                p = _take(sb["mamba"], mamba_j)
+                out, st = mb._mamba_forward_state(p["mixer"], cfg,
+                                                  cm.rmsnorm(p["ln"], h))
+                convs.append(st["conv"].astype(cfg.dtype))
+                ssms.append(st["ssm"])
+                h = h + out
+                mamba_j += 1
+            h = h + _ffn(sb, cfg, i, h)
+        mamba = {"conv": jnp.stack(convs), "ssm": jnp.stack(ssms)}
+        return h, (kv[0], kv[1], mamba)
+
+    x, (k, v, mamba) = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+    x = cm.rmsnorm(params["final_norm"], x)
+    logits = cm.unembed(params["embed"], x[:, -1:])
+    return {"k": k, "v": v, "mamba": mamba}, logits

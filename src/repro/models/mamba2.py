@@ -1,0 +1,301 @@
+"""Mamba-2 (SSD) blocks and the attention-free mamba2-370m model
+[arXiv:2405.21060].
+
+Block: in_proj → causal depthwise conv (xBC) → SSD scan → gated RMSNorm →
+out_proj.  Train/prefill use the chunk-parallel SSD (Pallas kernel on TPU,
+chunked oracle on CPU); decode carries (conv_state, ssm_state) — constant
+memory per sequence, which is why this family runs long_500k natively
+(DESIGN.md §4).
+
+ICSML applicability: in/out projections are quantizable (§6.1) via
+``cm.linear``; the scan stays f32 (state accumulation precision, mirroring the
+paper keeping scales/biases REAL).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import common as cm
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.d_inner
+    h = cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = d_inner + 2 * g * n
+    proj_out = 2 * d_inner + 2 * g * n + h   # z, xBC, dt
+    return d_inner, h, g, n, conv_dim, proj_out
+
+
+def mamba_spec(cfg: ArchConfig) -> Params:
+    d_inner, h, g, n, conv_dim, proj_out = _dims(cfg)
+    dt = cfg.dtype
+    return {
+        "in_proj": cm.linear_spec(cfg.d_model, proj_out, bias=False,
+                                  quant=cfg.quant, dtype=dt),
+        "conv_w": jax.ShapeDtypeStruct((cfg.conv_kernel, conv_dim), dt),
+        "conv_b": jax.ShapeDtypeStruct((conv_dim,), jnp.float32),
+        "dt_bias": jax.ShapeDtypeStruct((h,), jnp.float32),
+        "a_log": jax.ShapeDtypeStruct((h,), jnp.float32),
+        "d_skip": jax.ShapeDtypeStruct((h,), jnp.float32),
+        "norm": cm.rmsnorm_spec(d_inner),
+        "out_proj": cm.linear_spec(d_inner, cfg.d_model, bias=False,
+                                   quant=cfg.quant, dtype=dt),
+    }
+
+
+def mamba_init(key: jax.Array, cfg: ArchConfig) -> Params:
+    d_inner, h, g, n, conv_dim, proj_out = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": cm.linear_init(ks[0], cfg.d_model, proj_out, bias=False,
+                                  quant=cfg.quant, dtype=cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim), jnp.float32)
+                   / np.sqrt(cfg.conv_kernel)).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of dt in [1e-3, 1e-1]
+            jnp.exp(jax.random.uniform(ks[2], (h,), jnp.float32,
+                                       np.log(1e-3), np.log(1e-1))))),
+        "a_log": jnp.log(jnp.exp(jax.random.uniform(ks[3], (h,), jnp.float32,
+                                                    0.0, np.log(16.0)))),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": cm.rmsnorm_init(d_inner),
+        "out_proj": cm.linear_init(ks[0], d_inner, cfg.d_model, bias=False,
+                                   quant=cfg.quant, dtype=cfg.dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    d_inner, h, g, n, conv_dim, _ = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(p: Params, xbc: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C)."""
+    k = p["conv_w"].shape[0]
+    c = xbc.shape[-1]
+    w = p["conv_w"].astype(xbc.dtype)[:, None, :]        # (K, 1, C)
+    y = jax.lax.conv_general_dilated(
+        xbc, w,
+        window_strides=(1,),
+        padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    return jax.nn.silu(y + p["conv_b"].astype(xbc.dtype))
+
+
+def mamba_forward(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence mixer: x (B, S, d_model) -> (B, S, d_model)."""
+    d_inner, h, g, n, conv_dim, _ = _dims(cfg)
+    b, s, _ = x.shape
+    zxbcdt = cm.linear(p["in_proj"], x)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(p, xbc)
+    xs = xbc[..., :d_inner].reshape(b, s, h, cfg.ssm_headdim)
+    bmat = xbc[..., d_inner:d_inner + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., d_inner + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    y = kops.ssd(xs.astype(jnp.float32), dt, a,
+                 bmat.astype(jnp.float32), cmat.astype(jnp.float32))
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(cfg.dtype)
+    y = cm.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return cm.linear(p["out_proj"], y)
+
+
+# -- decode -----------------------------------------------------------------
+
+
+def mamba_cache_spec(cfg: ArchConfig, batch: int) -> Dict[str, Any]:
+    d_inner, h, g, n, conv_dim, _ = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_kernel - 1, conv_dim), cfg.dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, h, cfg.ssm_headdim, n), jnp.float32),
+    }
+
+
+def mamba_decode(p: Params, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token step: x (B, 1, d_model); cache carries conv + ssm state."""
+    d_inner, h, g, n, conv_dim, _ = _dims(cfg)
+    b = x.shape[0]
+    zxbcdt = cm.linear(p["in_proj"], x)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)            # (B,1,·)
+
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)   # (B, K, C)
+    conv_state = window[:, 1:]
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32))
+    xbc1 = jax.nn.silu(y + p["conv_b"])                  # (B, C) f32
+
+    xs = xbc1[:, :d_inner].reshape(b, h, cfg.ssm_headdim)
+    bmat = xbc1[:, d_inner:d_inner + g * n].reshape(b, g, n)
+    cmat = xbc1[:, d_inner + g * n:].reshape(b, g, n)
+    reps = h // g
+    bmat = jnp.repeat(bmat, reps, axis=1)
+    cmat = jnp.repeat(cmat, reps, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    new_state, yt = jax.vmap(kref.ssd_update_ref, in_axes=(0, 0, 0, None, 0, 0))(
+        cache["ssm"], xs, dt, a, bmat, cmat
+    )
+    yt = yt + p["d_skip"][None, :, None] * xs
+    yt = yt.reshape(b, 1, d_inner).astype(cfg.dtype)
+    yt = cm.rmsnorm(p["norm"], yt * jax.nn.silu(z))
+    out = cm.linear(p["out_proj"], yt)
+    return out, {"conv": conv_state, "ssm": new_state}
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 model (norm → mixer → residual, no separate FFN)
+# ---------------------------------------------------------------------------
+
+
+def model_spec(cfg: ArchConfig) -> Params:
+    blk = {"ln": cm.rmsnorm_spec(cfg.d_model), "mixer": mamba_spec(cfg)}
+    from repro.models.transformer import stacked_specs
+    return {
+        "embed": cm.embed_spec(cfg.vocab, cfg.d_model, cfg.dtype),
+        "blocks": stacked_specs(blk, cfg.n_layers),
+        "final_norm": cm.rmsnorm_spec(cfg.d_model),
+    }
+
+
+def model_init(key: jax.Array, cfg: ArchConfig) -> Params:
+    k_emb, k_blocks = jax.random.split(key)
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+
+    def one(k):
+        return {"ln": cm.rmsnorm_init(cfg.d_model), "mixer": mamba_init(k, cfg)}
+
+    return {
+        "embed": cm.embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "blocks": jax.vmap(one)(keys),
+        "final_norm": cm.rmsnorm_init(cfg.d_model),
+    }
+
+
+def forward_logits(params: Params, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+
+    def body(h, blk):
+        h = h + mamba_forward(blk["mixer"], cfg, cm.rmsnorm(blk["ln"], h))
+        return cm.constrain(h, "btd"), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "layer" else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"], unroll=cfg.scan_unroll)
+    x = cm.rmsnorm(params["final_norm"], x)
+    return cm.unembed(params["embed"], x)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    return cm.cross_entropy(forward_logits(params, cfg, batch["tokens"]),
+                            batch["labels"])
+
+
+def cache_spec(cfg: ArchConfig, batch: int, cache_len: int) -> Dict[str, Any]:
+    one = mamba_cache_spec(cfg, batch)
+    from repro.models.transformer import stacked_specs
+    return stacked_specs(one, cfg.n_layers)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, cache_len))
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jax.Array, cache_len: int
+            ) -> Tuple[Dict[str, Any], jax.Array]:
+    """Prefill = full forward; final states distilled by a short scan tail.
+
+    The SSM has O(1) state, so 'prefill' just runs the sequence and keeps the
+    final (conv, ssm) states.  We recompute states from the last K tokens for
+    conv and run the SSD with state output for ssm; for simplicity (and since
+    decode correctness is covered by stepwise tests) we rebuild the state by
+    stepping the final token window."""
+    b, s = tokens.shape
+    x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+
+    caches = []
+    h = x
+
+    # Python loop over layers here would unroll; instead run scan keeping
+    # final-state outputs per layer via mamba_forward_with_state.
+    def body(hh, blk):
+        normed = cm.rmsnorm(blk["ln"], hh)
+        out, state = _mamba_forward_state(blk["mixer"], cfg, normed)
+        return hh + out, state
+
+    h, states = jax.lax.scan(body, h, params["blocks"], unroll=cfg.scan_unroll)
+    h = cm.rmsnorm(params["final_norm"], h)
+    logits = cm.unembed(params["embed"], h[:, -1:])
+    return states, logits
+
+
+def _mamba_forward_state(p: Params, cfg: ArchConfig, x: jax.Array
+                         ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """mamba_forward that also returns the final (conv, ssm) state."""
+    d_inner, h, g, n, conv_dim, _ = _dims(cfg)
+    b, s, _ = x.shape
+    zxbcdt = cm.linear(p["in_proj"], x)
+    z, xbc_pre, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_state = xbc_pre[:, -(cfg.conv_kernel - 1):, :]
+    xbc = _causal_conv(p, xbc_pre)
+    xs = xbc[..., :d_inner].reshape(b, s, h, cfg.ssm_headdim).astype(jnp.float32)
+    bmat = xbc[..., d_inner:d_inner + g * n].reshape(b, s, g, n).astype(jnp.float32)
+    cmat = xbc[..., d_inner + g * n:].reshape(b, s, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    y = kops.ssd(xs, dt, a, bmat, cmat)
+
+    # Final SSM state: run the recurrence contribution sum (exact, O(S)).
+    reps = h // g
+    bf = jnp.repeat(bmat, reps, axis=2)
+    alpha = dt * a                                        # (B,S,H)
+    srev = jnp.cumsum(alpha[:, ::-1], axis=1)[:, ::-1]    # decay from τ to end
+    w = jnp.exp(srev - alpha) * dt                        # exp(sum_{σ>τ}α)·dtτ
+    ssm_state = jnp.einsum("bsh,bshp,bshn->bhpn", w, xs, bf)
+
+    y = y + p["d_skip"][None, None, :, None] * xs
+    y = y.reshape(b, s, d_inner).astype(cfg.dtype)
+    y = cm.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return cm.linear(p["out_proj"], y), {"conv": conv_state, "ssm": ssm_state}
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                tokens: jax.Array, pos: jax.Array
+                ) -> Tuple[Dict[str, Any], jax.Array]:
+    x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+
+    def body(h, inputs):
+        blk, conv_c, ssm_c = inputs
+        out, new_cache = mamba_decode(blk["mixer"], cfg,
+                                      cm.rmsnorm(blk["ln"], h),
+                                      {"conv": conv_c, "ssm": ssm_c})
+        return h + out, (new_cache["conv"], new_cache["ssm"])
+
+    x, (conv, ssm) = jax.lax.scan(
+        body, x, (params["blocks"], cache["conv"], cache["ssm"]),
+        unroll=cfg.scan_unroll,
+    )
+    x = cm.rmsnorm(params["final_norm"], x)
+    return {"conv": conv, "ssm": ssm}, cm.unembed(params["embed"], x)

@@ -1,0 +1,271 @@
+"""Dense GQA decoder — command-r(-plus), nemotron-4, qwen3, and the backbone
+for llava-next (vlm.py) and the MoE models (moe.py swaps the FFN).
+
+Layers are stacked on a leading axis and executed with ``jax.lax.scan`` so the
+dry-run HLO stays compact at 96 layers; training remat is per-layer
+(``jax.checkpoint`` around the scan body) when ``cfg.remat == 'layer'``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer block (attention + FFN) — ffn_* hooks let moe.py substitute MoE.
+# ---------------------------------------------------------------------------
+
+
+def _attn_cfg(cfg: ArchConfig) -> cm.AttnConfig:
+    return cm.AttnConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        qk_norm=cfg.qk_norm,
+        bias=cfg.bias,
+        rope_theta=cfg.rope_theta,
+        window=cfg.sliding_window,
+        d_head=cfg.d_head,
+    )
+
+
+def _mlp_cfg(cfg: ArchConfig) -> cm.MlpConfig:
+    return cm.MlpConfig(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                        kind=cfg.mlp_kind, bias=cfg.bias)
+
+
+def block_spec(cfg: ArchConfig, ffn_spec: Callable[[], Params]) -> Params:
+    p = {
+        "ln1": cm.rmsnorm_spec(cfg.d_model),
+        "attn": cm.attn_spec(_attn_cfg(cfg), cfg.quant, cfg.dtype),
+        "ffn": ffn_spec(),
+    }
+    if not cfg.parallel_block:
+        p["ln2"] = cm.rmsnorm_spec(cfg.d_model)
+    return p
+
+
+def block_init(key: jax.Array, cfg: ArchConfig,
+               ffn_init: Callable[[jax.Array], Params]) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": cm.rmsnorm_init(cfg.d_model),
+        "attn": cm.attn_init(k1, _attn_cfg(cfg), cfg.quant, cfg.dtype),
+        "ffn": ffn_init(k2),
+    }
+    if not cfg.parallel_block:
+        p["ln2"] = cm.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def block_forward(
+    blk: Params, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+    ffn_apply: Callable[[Params, jax.Array], jax.Array],
+) -> jax.Array:
+    acfg = _attn_cfg(cfg)
+    h = cm.rmsnorm(blk["ln1"], x)
+    a = cm.attn_forward(blk["attn"], acfg, h, positions)
+    if cfg.parallel_block:
+        # command-r: attention and FFN read the same normed input (one LN).
+        m = ffn_apply(blk["ffn"], h)
+        x = x + a + m
+    else:
+        x = x + a
+        h2 = cm.rmsnorm(blk["ln2"], x)
+        x = x + ffn_apply(blk["ffn"], h2)
+    return cm.constrain(x, "btd")
+
+
+def block_prefill(blk, cfg, x, positions, cache_len, ffn_apply):
+    acfg = _attn_cfg(cfg)
+    h = cm.rmsnorm(blk["ln1"], x)
+    a, kv = cm.attn_prefill(blk["attn"], acfg, h, positions, cache_len)
+    if cfg.parallel_block:
+        x = x + a + ffn_apply(blk["ffn"], h)
+    else:
+        x = x + a
+        x = x + ffn_apply(blk["ffn"], cm.rmsnorm(blk["ln2"], x))
+    return cm.constrain(x, "btd"), kv
+
+
+def block_decode(blk, cfg, x, pos, kv, ffn_apply):
+    acfg = _attn_cfg(cfg)
+    h = cm.rmsnorm(blk["ln1"], x)
+    a, kv = cm.attn_decode(blk["attn"], acfg, h, pos, kv)
+    if cfg.parallel_block:
+        x = x + a + ffn_apply(blk["ffn"], h)
+    else:
+        x = x + a
+        x = x + ffn_apply(blk["ffn"], cm.rmsnorm(blk["ln2"], x))
+    return x, kv
+
+
+# ---------------------------------------------------------------------------
+# Full decoder
+# ---------------------------------------------------------------------------
+
+
+def stacked_specs(one: Params, n: int) -> Params:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), one
+    )
+
+
+def decoder_spec(cfg: ArchConfig, ffn_spec=None) -> Params:
+    ffn_spec = ffn_spec or (lambda: cm.mlp_spec(_mlp_cfg(cfg), cfg.quant, cfg.dtype))
+    return {
+        "embed": cm.embed_spec(cfg.vocab, cfg.d_model, cfg.dtype),
+        "blocks": stacked_specs(block_spec(cfg, ffn_spec), cfg.n_layers),
+        "final_norm": cm.rmsnorm_spec(cfg.d_model),
+    }
+
+
+def decoder_init(key: jax.Array, cfg: ArchConfig, ffn_init=None) -> Params:
+    ffn_init = ffn_init or (
+        lambda k: cm.mlp_init(k, _mlp_cfg(cfg), cfg.quant, cfg.dtype)
+    )
+    k_emb, k_blocks = jax.random.split(key)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: block_init(k, cfg, ffn_init))(block_keys)
+    return {
+        "embed": cm.embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "blocks": blocks,
+        "final_norm": cm.rmsnorm_init(cfg.d_model),
+    }
+
+
+def _scan_blocks(body, x, blocks, remat: str, unroll: int = 1):
+    if remat == "layer":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, blocks, unroll=unroll)
+    return x
+
+
+def decoder_hidden(
+    params: Params, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+    ffn_apply=None,
+) -> jax.Array:
+    """Run the block stack over embedded inputs x (B, S, D)."""
+    ffn_apply = ffn_apply or (lambda p, h: cm.mlp_forward(p, _mlp_cfg(cfg), h))
+
+    def body(h, blk):
+        return block_forward(blk, cfg, h, positions, ffn_apply), None
+
+    x = _scan_blocks(body, x, params["blocks"], cfg.remat, cfg.scan_unroll)
+    return cm.rmsnorm(params["final_norm"], x)
+
+
+def forward_logits(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                   ffn_apply=None, prefix_embed: Optional[jax.Array] = None
+                   ) -> jax.Array:
+    """Teacher-forced logits. prefix_embed (B, P, D) is prepended (VLM)."""
+    x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(cfg.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    h = decoder_hidden(params, cfg, x, positions, ffn_apply)
+    return cm.unembed(params["embed"], h)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            ffn_apply=None) -> jax.Array:
+    logits = forward_logits(params, cfg, batch["tokens"], ffn_apply,
+                            prefix_embed=batch.get("prefix_embed"))
+    if "prefix_embed" in batch:
+        logits = logits[:, batch["prefix_embed"].shape[1]:]
+    return cm.cross_entropy(logits, batch["labels"])
+
+
+# -- serving ---------------------------------------------------------------
+
+
+def cache_spec(cfg: ArchConfig, batch: int, cache_len: int) -> Dict[str, Any]:
+    kv_shape = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, cfg.d_head)
+    if cfg.kv_quant:
+        # §6.1 quantization applied to serving state: int8 K/V + REAL scales
+        sc_shape = kv_shape[:-1]
+        return {
+            "k": jax.ShapeDtypeStruct(kv_shape, jnp.int8),
+            "v": jax.ShapeDtypeStruct(kv_shape, jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct(sc_shape, jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct(sc_shape, jnp.float32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct(kv_shape, cfg.dtype),
+        "v": jax.ShapeDtypeStruct(kv_shape, cfg.dtype),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> Dict[str, Any]:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, cache_len)
+    )
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jax.Array,
+            cache_len: int, ffn_apply=None,
+            prefix_embed: Optional[jax.Array] = None
+            ) -> Tuple[Dict[str, Any], jax.Array]:
+    ffn_apply = ffn_apply or (lambda p, h: cm.mlp_forward(p, _mlp_cfg(cfg), h))
+    x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(cfg.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(h, blk):
+        h, kv = block_prefill(blk, cfg, h, positions, cache_len, ffn_apply)
+        if cfg.kv_quant:
+            kq, ks = cm._quantize_kv(kv[0])
+            vq, vs = cm._quantize_kv(kv[1])
+            kv = (kq, vq, ks, vs)
+        return h, kv
+
+    x, kv = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+    h = cm.rmsnorm(params["final_norm"], x)
+    logits = cm.unembed(params["embed"], h[:, -1:])
+    if cfg.kv_quant:
+        return {"k": kv[0], "v": kv[1], "k_scale": kv[2], "v_scale": kv[3]}, logits
+    return {"k": kv[0], "v": kv[1]}, logits
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                tokens: jax.Array, pos: jax.Array, ffn_apply=None
+                ) -> Tuple[Dict[str, Any], jax.Array]:
+    """One decode step: tokens (B, 1), pos scalar int32; cache donated."""
+    ffn_apply = ffn_apply or (lambda p, h: cm.mlp_forward(p, _mlp_cfg(cfg), h))
+    x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+
+    if cfg.kv_quant:
+        def body(h, inputs):
+            blk, kc, vc, ksc, vsc = inputs
+            h, kv = block_decode(blk, cfg, h, pos, (kc, vc, ksc, vsc), ffn_apply)
+            return h, kv
+
+        x, kv = jax.lax.scan(
+            body, x,
+            (params["blocks"], cache["k"], cache["v"],
+             cache["k_scale"], cache["v_scale"]),
+            unroll=cfg.scan_unroll)
+        h = cm.rmsnorm(params["final_norm"], x)
+        return ({"k": kv[0], "v": kv[1], "k_scale": kv[2], "v_scale": kv[3]},
+                cm.unembed(params["embed"], h))
+
+    def body(h, inputs):
+        blk, kc, vc = inputs
+        h, kv = block_decode(blk, cfg, h, pos, (kc, vc), ffn_apply)
+        return h, kv
+
+    x, (k, v) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]),
+                             unroll=cfg.scan_unroll)
+    h = cm.rmsnorm(params["final_norm"], x)
+    logits = cm.unembed(params["embed"], h)
+    return {"k": k, "v": v}, logits

@@ -1,0 +1,66 @@
+"""LLaVA-NeXT-style VLM: vision encoder + projector stubbed; the language
+backbone is the dense GQA decoder with an image-token prefix.
+
+AnyRes tiling [hf:llava-hf/llava-v1.6-*]: the (stubbed) vision tower encodes a
+base view plus 4 tiles → ``cfg.num_image_tokens`` patch embeddings; the 2-layer
+GELU projector maps them into the language model's embedding space, and they
+are prepended to the text tokens (the standard llava interleave for a single
+leading image).  ``input_specs`` provides the patch embeddings directly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import transformer as tf
+
+Params = Dict[str, Any]
+
+VISION_D = 1152  # SigLIP-style vision feature width (stub)
+
+
+def model_spec(cfg: ArchConfig) -> Params:
+    p = tf.decoder_spec(cfg)
+    p["projector"] = {
+        "fc1": cm.linear_spec(VISION_D, cfg.d_model, bias=True, quant=None, dtype=cfg.dtype),
+        "fc2": cm.linear_spec(cfg.d_model, cfg.d_model, bias=True, quant=None, dtype=cfg.dtype),
+    }
+    return p
+
+
+def model_init(key: jax.Array, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = tf.decoder_init(k1, cfg)
+    p["projector"] = {
+        "fc1": cm.linear_init(k2, VISION_D, cfg.d_model, bias=True, quant=None, dtype=cfg.dtype),
+        "fc2": cm.linear_init(k3, cfg.d_model, cfg.d_model, bias=True, quant=None, dtype=cfg.dtype),
+    }
+    return p
+
+
+def project(p: Params, image_emb: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(cm.linear(p["projector"]["fc1"], image_emb))
+    return cm.linear(p["projector"]["fc2"], h)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    prefix = project(params, batch["image_emb"])
+    b2 = dict(batch, prefix_embed=prefix)
+    return tf.loss_fn(params, cfg, b2)
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            cache_len: int) -> Tuple[Dict[str, Any], jax.Array]:
+    prefix = project(params, batch["image_emb"])
+    return tf.prefill(params, cfg, batch["tokens"], cache_len,
+                      prefix_embed=prefix)
+
+
+cache_spec = tf.cache_spec
+init_cache = tf.init_cache
+decode_step = tf.decode_step

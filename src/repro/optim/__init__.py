@@ -1,0 +1,9 @@
+"""Optimizers + schedules (self-contained, like ICSML's §4.2.4 substrate)."""
+
+from repro.optim.adamw import OptState, adamw, apply_updates, global_norm, sgd
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "OptState", "adamw", "apply_updates", "global_norm", "sgd",
+    "constant", "cosine_decay", "linear_warmup_cosine",
+]

@@ -1,0 +1,118 @@
+"""AdamW + SGD, pytree-native, sharding-transparent.
+
+Optimizer state mirrors the parameter pytree (same shapes/shardings →
+ZeRO-like partitioning falls out of the parameter sharding rules).  Moments
+are kept in f32 regardless of parameter dtype; integer leaves (quantized
+weights) are not updated (serving-only parameters).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment (f32, like params)
+    nu: Any          # second moment (f32)
+
+
+def _trainable(leaf: jax.Array) -> bool:
+    return jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+def adamw(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: Optional[float] = 1.0,
+):
+    """Returns (init_fn, update_fn) in the optax convention."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params: Any) -> OptState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32) if _trainable(p) else jnp.zeros((), jnp.float32),
+            params,
+        )
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                        nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(grads: Any, state: OptState, params: Any) -> Tuple[Any, OptState]:
+        step = state.step + 1
+        if grad_clip is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        def moments(g, m, v):
+            g = g.astype(jnp.float32)
+            return b1 * m + (1 - b1) * g, b2 * v + (1 - b2) * g * g
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+
+        new_m, new_v, updates = [], [], []
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+        for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+            if not _trainable(p):
+                new_m.append(m); new_v.append(v)
+                updates.append(jnp.zeros_like(p))
+                continue
+            m2, v2 = moments(g, m, v)
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            upd = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            new_m.append(m2); new_v.append(v2)
+            updates.append((-lr_t * upd).astype(p.dtype))
+
+        return (
+            treedef.unflatten(updates),
+            OptState(step=step, mu=treedef.unflatten(new_m),
+                     nu=treedef.unflatten(new_v)),
+        )
+
+    return init, update
+
+
+def sgd(lr: float, momentum: float = 0.0):
+    def init(params):
+        mu = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32) if _trainable(p) else jnp.zeros((), jnp.float32),
+            params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=jax.tree.map(jnp.zeros_like, mu))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        mu = jax.tree.map(
+            lambda g, m, p: momentum * m + g.astype(jnp.float32)
+            if _trainable(p) else m,
+            grads, state.mu, params)
+        updates = jax.tree.map(
+            lambda m, p: (-lr * m).astype(p.dtype)
+            if _trainable(p) else jnp.zeros_like(p),
+            mu, params)
+        return updates, OptState(step=step, mu=mu, nu=state.nu)
+
+    return init, update
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))

@@ -1,0 +1,4 @@
+from repro.serving.cyclic import CyclicDecoder
+from repro.serving.engine import Completion, Engine, Request
+
+__all__ = ["CyclicDecoder", "Completion", "Engine", "Request"]

@@ -1,0 +1,122 @@
+"""Batched serving engine: static-batch prefill + synchronized decode.
+
+The ICSML discipline applied to serving (DESIGN.md §2):
+
+* the KV cache is **statically preallocated** at (batch_slots, cache_len) and
+  donated across decode steps (dataMem: one arena, updated in place);
+* decode is a fixed-shape jitted step — no dynamic allocation ever happens
+  after engine construction;
+* requests are admitted in waves (static batching): all slots share the
+  position counter, exactly like the PLC scan cycle shares one clock.
+
+`CyclicEngine` (serving/cyclic.py) additionally splits each decode step into
+per-cycle layer segments — the paper's multipart inference (§6.3) for big
+models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelAPI
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    temperature: float = 0.0      # 0 => greedy
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: np.ndarray
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        n = len(self.tokens)
+        return n / self.decode_s if self.decode_s > 0 else float("inf")
+
+
+def sample(logits: jax.Array, temperature: float, key: jax.Array) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+class Engine:
+    """Wave-batched serving over a ModelAPI."""
+
+    def __init__(self, api: ModelAPI, params: Any, *, batch_slots: int,
+                 cache_len: int, extras: Optional[Dict[str, jax.Array]] = None):
+        self.api = api
+        self.params = params
+        self.batch_slots = batch_slots
+        self.cache_len = cache_len
+        self.extras = extras or {}
+
+        def _decode(params, cache, tokens, pos, key, temperature):
+            batch = {"tokens": tokens, **self.extras}
+            cache, logits = api.decode(params, cache, batch, pos)
+            nxt = sample(logits[:, -1], temperature, key)
+            return cache, nxt
+
+        # cache donated: the static arena is updated in place step to step
+        self._decode = jax.jit(_decode, donate_argnums=1,
+                               static_argnames=("temperature",))
+
+    def run_wave(self, requests: Sequence[Request]) -> List[Completion]:
+        """Serve one wave of ≤ batch_slots requests (right-padded prompts)."""
+        assert len(requests) <= self.batch_slots
+        reqs = list(requests)
+        b = self.batch_slots
+        plen = max(len(r.prompt) for r in reqs)
+        prompts = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(reqs):
+            prompts[i, :len(r.prompt)] = r.prompt  # noqa: E203
+
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.asarray(prompts), **self.extras}
+        cache, logits = self.api.prefill(self.params, batch, self.cache_len)
+        first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        t_prefill = time.perf_counter() - t0
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        out = np.zeros((b, max_new), np.int32)
+        out[:, 0] = first
+        cur = jnp.asarray(first[:, None])
+        key = jax.random.PRNGKey(0)
+        temperature = reqs[0].temperature
+
+        t1 = time.perf_counter()
+        for step in range(1, max_new):
+            pos = jnp.int32(plen + step - 1)
+            key, sub = jax.random.split(key)
+            cache, nxt = self._decode(self.params, cache, cur, pos, sub, temperature)
+            out[:, step] = np.asarray(nxt)
+            cur = nxt[:, None]
+        jax.block_until_ready(cur)
+        t_decode = time.perf_counter() - t1
+
+        return [
+            Completion(uid=r.uid, tokens=out[i, :r.max_new_tokens],
+                       prefill_s=t_prefill, decode_s=t_decode)
+            for i, r in enumerate(reqs)
+        ]
+
+    def serve(self, requests: Sequence[Request]) -> List[Completion]:
+        """Serve an arbitrary number of requests in waves."""
+        done: List[Completion] = []
+        for i in range(0, len(requests), self.batch_slots):
+            done.extend(self.run_wave(requests[i:i + self.batch_slots]))
+        return done

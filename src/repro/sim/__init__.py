@@ -1,0 +1,7 @@
+from repro.sim.detector import TrainResult, build_detector, train_detector
+from repro.sim.msf import (MSFPlant, CascadePID, SimTrace, adc, build_dataset,
+                           make_attacks, simulate)
+
+__all__ = ["TrainResult", "build_detector", "train_detector", "MSFPlant",
+           "CascadePID", "SimTrace", "adc", "build_dataset", "make_attacks",
+           "simulate"]

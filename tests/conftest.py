@@ -1,0 +1,19 @@
+import os
+
+# Tests run single-device (the dry-run sets its own device count in its own
+# process). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import prune
+from repro.kernels import ops, ref
+from repro.kernels.qmatmul import qmatmul
+from repro.kernels.sparse_matmul import sparse_matmul
+from repro.kernels.ssd_scan import ssd_scan
+
+
+class TestQMatmul:
+    @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                       (128, 256, 512)])
+    @pytest.mark.parametrize("dtype", [jnp.int8, jnp.int16])
+    def test_shapes_dtypes(self, m, k, n, dtype):
+        info = jnp.iinfo(dtype)
+        lim = min(int(info.max), 127)
+        xq = jax.random.randint(jax.random.PRNGKey(0), (m, k), -lim, lim, dtype)
+        wq = jax.random.randint(jax.random.PRNGKey(1), (k, n), -lim, lim, dtype)
+        scale = jax.random.uniform(jax.random.PRNGKey(2), (n,), jnp.float32,
+                                   1e-3, 1e-2)
+        bias = jax.random.normal(jax.random.PRNGKey(3), (n,))
+        out = qmatmul(xq, wq, scale, bias, interpret=True)
+        want = ref.qmatmul_ref(xq, wq, scale, bias)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_int_accumulation_exact(self):
+        """The integer part must be bit-exact (pure int32 accumulate)."""
+        xq = jax.random.randint(jax.random.PRNGKey(0), (128, 384), -127, 127,
+                                jnp.int8)
+        wq = jax.random.randint(jax.random.PRNGKey(1), (384, 128), -127, 127,
+                                jnp.int8)
+        one = jnp.ones((128,), jnp.float32)
+        out = qmatmul(xq, wq, one, None, interpret=True)
+        want = ref.qmatmul_ref(xq, wq, one, None)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    def test_block_shapes(self):
+        xq = jax.random.randint(jax.random.PRNGKey(0), (256, 256), -127, 127,
+                                jnp.int8)
+        wq = jax.random.randint(jax.random.PRNGKey(1), (256, 256), -127, 127,
+                                jnp.int8)
+        s = jnp.full((256,), 1e-2, jnp.float32)
+        ref_out = ref.qmatmul_ref(xq, wq, s, None)
+        for bm, bn, bk in [(128, 128, 128), (256, 128, 128), (128, 256, 256)]:
+            out = qmatmul(xq, wq, s, None, block_m=bm, block_n=bn,
+                          block_k=bk, interpret=True)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                       rtol=1e-5, atol=1e-4)
+
+    def test_wrapper_padding(self):
+        """ops.quantized_matmul pads ragged shapes to kernel blocks."""
+        xq = jax.random.randint(jax.random.PRNGKey(0), (5, 200), -127, 127,
+                                jnp.int8)
+        wq = jax.random.randint(jax.random.PRNGKey(1), (200, 70), -127, 127,
+                                jnp.int8)
+        s = jnp.full((70,), 1e-2, jnp.float32)
+        out = ops.quantized_matmul(xq, wq, s, backend="pallas")
+        want = ref.qmatmul_ref(xq, wq, s)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+
+class TestSparseMatmul:
+    @pytest.mark.parametrize("sparsity", [0.0, 0.3, 0.6, 0.9])
+    def test_sparsity_sweep(self, sparsity):
+        w = jax.random.normal(jax.random.PRNGKey(0), (512, 768))
+        wp = prune.block_magnitude_prune(w, sparsity, (128, 128))
+        bs = prune.compress_blocks(wp, (128, 128))
+        x = jax.random.normal(jax.random.PRNGKey(1), (128, 512))
+        out = sparse_matmul(x, bs, interpret=True)
+        want = ref.sparse_matmul_ref(x, bs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("block", [(64, 64), (128, 128)])
+    def test_block_sizes(self, block):
+        w = jax.random.normal(jax.random.PRNGKey(2), (256, 256))
+        wp = prune.block_magnitude_prune(w, 0.5, block)
+        bs = prune.compress_blocks(wp, block)
+        x = jax.random.normal(jax.random.PRNGKey(3), (64, 256))
+        out = sparse_matmul(x, bs, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.sparse_matmul_ref(x, bs)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_flop_skip_accounting(self):
+        """The kernel grid is exactly nnz_blocks — pruned blocks cost zero."""
+        w = jax.random.normal(jax.random.PRNGKey(4), (512, 512))
+        wp = prune.block_magnitude_prune(w, 0.75, (128, 128))
+        bs = prune.compress_blocks(wp, (128, 128))
+        assert bs.nnz_blocks == 4   # of 16
+
+
+class TestSSD:
+    @pytest.mark.parametrize("t,h,p,n,g", [(128, 2, 32, 16, 1),
+                                           (256, 4, 64, 32, 2),
+                                           (64, 8, 16, 64, 8)])
+    def test_vs_sequential_ref(self, t, h, p, n, g):
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        x = jax.random.normal(ks[0], (1, t, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, t, h))) * 0.2
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        b = jax.random.normal(ks[3], (1, t, g, n)) * 0.3
+        c = jax.random.normal(ks[4], (1, t, g, n)) * 0.3
+        want = ops.ssd(x, dt, a, b, c, backend="ref")
+        got = ops.ssd(x, dt, a, b, c, backend="pallas", chunk=min(64, t))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    @pytest.mark.parametrize("chunk", [16, 32, 128])
+    def test_chunk_invariance(self, chunk):
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        t, h, p, n = 128, 2, 16, 8
+        x = jax.random.normal(ks[0], (1, t, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, t, h))) * 0.2
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        b = jax.random.normal(ks[3], (1, t, 1, n)) * 0.3
+        c = jax.random.normal(ks[4], (1, t, 1, n)) * 0.3
+        want = ops.ssd(x, dt, a, b, c, backend="ref")
+        got = ops.ssd(x, dt, a, b, c, backend="pallas", chunk=chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_chunked_oracle_matches_sequential(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 5)
+        t, h, p, n = 256, 4, 32, 16
+        x = jax.random.normal(ks[0], (2, t, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (2, t, h))) * 0.3
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+        b = jax.random.normal(ks[3], (2, t, 2, n)) * 0.3
+        c = jax.random.normal(ks[4], (2, t, 2, n)) * 0.3
+        seq = ops.ssd(x, dt, a, b, c, backend="ref")
+        chk = ops.ssd(x, dt, a, b, c, backend="chunked")
+        np.testing.assert_allclose(np.asarray(chk), np.asarray(seq),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_decode_step_matches_scan_tail(self):
+        """ssd_update_ref stepping must agree with the full scan."""
+        ks = jax.random.split(jax.random.PRNGKey(3), 5)
+        t, h, p, n = 16, 2, 8, 4
+        x = jax.random.normal(ks[0], (t, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (t, h))) * 0.3
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+        b = jax.random.normal(ks[3], (t, h, n)) * 0.3
+        c = jax.random.normal(ks[4], (t, h, n)) * 0.3
+        full = ref.ssd_scan_ref(x, dt, a, b, c)
+        state = jnp.zeros((h, p, n))
+        for i in range(t):
+            state, y = ref.ssd_update_ref(state, x[i], dt[i], a, b[i], c[i])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(full[-1]),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,61 @@
+"""Porting methodology (§4.3): BINARR/ARRBIN + extract/reconstruct/load."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layers as L, porting, sequential
+
+
+class TestBinaryIO:
+    def test_arrbin_binarr_roundtrip(self, tmp_path):
+        arr = np.random.default_rng(0).normal(size=(13, 7)).astype(np.float32)
+        path = str(tmp_path / "a.bin")
+        nbytes = porting.arrbin(path, arr)
+        assert nbytes == arr.nbytes == os.path.getsize(path)
+        back = porting.binarr(path, np.float32, (13, 7))
+        np.testing.assert_array_equal(back, arr)
+
+    def test_binarr_size_mismatch_raises(self, tmp_path):
+        path = str(tmp_path / "b.bin")
+        porting.arrbin(path, np.zeros(10, np.float32))
+        with pytest.raises(ValueError):
+            porting.binarr(path, np.float32, (11,))
+
+    def test_int_dtypes(self, tmp_path):
+        arr = np.arange(-8, 8, dtype=np.int8)
+        path = str(tmp_path / "c.bin")
+        porting.arrbin(path, arr)
+        np.testing.assert_array_equal(porting.binarr(path, np.int8, (16,)), arr)
+
+
+class TestPortMLP:
+    def test_roundtrip_bit_identical(self, tmp_path, key):
+        trained = sequential(
+            [L.Input(),
+             L.Dense(units=64, activation="relu"),
+             L.Dense(units=32, activation="relu"),
+             L.Dense(units=2, activation="linear")], (400,))
+        params = trained.init_params(key)
+        ported, ported_params = porting.port_mlp(trained, params, str(tmp_path))
+
+        x = jax.random.normal(jax.random.PRNGKey(9), (400,))
+        a = trained.apply(params, x)
+        b = ported.apply(ported_params, x)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_exported_files_exist(self, tmp_path, key):
+        m = sequential([L.Input(), L.Dense(units=4)], (8,))
+        p = m.init_params(key)
+        paths = porting.export_weights(porting.extract_mlp_weights(p, m),
+                                       str(tmp_path))
+        assert all(os.path.exists(pth) for pth in paths)
+        assert any("L0_weights" in pth for pth in paths)
+
+    def test_build_mlp_shapes(self):
+        m = porting.build_mlp([64, 32, 2], 400, ["relu", "relu", "linear"])
+        shapes = m.graph.infer_shapes((400,))
+        assert shapes[m.graph.output_uid] == (2,)

@@ -1,0 +1,115 @@
+"""Quantization (§6.1): Table 2 byte-exact, op counts, error bounds."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import layers as L, quantize, sequential
+
+
+class TestTable2:
+    """Exact reproduction of the paper's Table 2 (512-in/512-out layer)."""
+
+    def test_sint(self):
+        r = quantize.memory_report(512, 512, "SINT")
+        assert r == {"weights": 262144, "biases": 2048,
+                     "scaling_factors": 2052, "total": 266244}
+
+    def test_int(self):
+        assert quantize.memory_report(512, 512, "INT")["total"] == 528388
+
+    def test_dint(self):
+        assert quantize.memory_report(512, 512, "DINT")["total"] == 1052676
+
+    def test_real(self):
+        r = quantize.memory_report(512, 512, "REAL")
+        assert r["total"] == 1050624 and r["scaling_factors"] == 0
+
+    def test_compression_ratios(self):
+        # §6.1: SINT −74.66 %, INT −49.71 % vs REAL
+        real = quantize.memory_report(512, 512, "REAL")["total"]
+        sint = quantize.memory_report(512, 512, "SINT")["total"]
+        intq = quantize.memory_report(512, 512, "INT")["total"]
+        assert abs((1 - sint / real) * 100 - 74.66) < 0.05
+        assert abs((1 - intq / real) * 100 - 49.71) < 0.05
+
+
+class TestOpCounts:
+    """§6.1: quantized inference for the 512x512 layer needs 262,144 int
+    mults + 262,144 int adds but only ~1024 float mults + 512 float adds."""
+
+    def test_float(self):
+        c = quantize.op_counts(512, 512, quantized=False)
+        assert c["float_mul"] == 262_144
+        assert c["float_add"] == 262_656   # accumulate + bias
+        assert c["int_mul"] == 0
+
+    def test_quantized(self):
+        c = quantize.op_counts(512, 512, quantized=True)
+        assert c["int_mul"] == 262_144 and c["int_add"] == 262_144
+        assert c["float_mul"] == 1024 and c["float_add"] == 512
+
+
+class TestQuantizeTensor:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.sampled_from(["SINT", "INT", "DINT"]),
+           st.booleans())
+    def test_property_error_bound(self, seed, scheme, per_channel):
+        """|w - dequantize(quantize(w))| <= scale/2 element-wise."""
+        w = jax.random.normal(jax.random.PRNGKey(seed % 2**32), (32, 16)) * 3.0
+        qt = quantize.quantize_tensor(w, scheme, per_channel=per_channel)
+        err = jnp.abs(qt.dequantize() - w)
+        bound = quantize.quantization_error_bound(qt.scale)
+        assert bool(jnp.all(err <= bound + 1e-6))
+
+    def test_per_channel_tighter_than_per_tensor(self):
+        w = jnp.concatenate([jnp.ones((16, 8)) * 0.01, jnp.ones((16, 8)) * 10.0],
+                            axis=1)
+        pc = quantize.quantize_tensor(w, "SINT", per_channel=True)
+        pt = quantize.quantize_tensor(w, "SINT", per_channel=False)
+        err_pc = float(jnp.abs(pc.dequantize() - w).max())
+        err_pt = float(jnp.abs(pt.dequantize() - w).max())
+        assert err_pc < err_pt
+
+    def test_int_dtypes(self):
+        w = jnp.ones((4, 4))
+        assert quantize.quantize_tensor(w, "SINT").q.dtype == jnp.int8
+        assert quantize.quantize_tensor(w, "INT").q.dtype == jnp.int16
+        assert quantize.quantize_tensor(w, "DINT").q.dtype == jnp.int32
+
+
+class TestQuantizedInference:
+    def _model(self, key):
+        m = sequential([L.Input(),
+                        L.Dense(units=64, activation="relu"),
+                        L.Dense(units=8, activation="linear")], (32,))
+        return m, m.init_params(key)
+
+    def test_quantized_output_close(self, key):
+        m, p = self._model(key)
+        x = jax.random.normal(jax.random.PRNGKey(1), (32,))
+        ref = m.apply(p, x)
+        for scheme, tol in (("SINT", 0.1), ("INT", 1e-3), ("DINT", 1e-4)):
+            qp = quantize.quantize_params(m, p, scheme, calibration=[x])
+            out = m.apply(qp, x)
+            assert float(jnp.abs(out - ref).max()) < tol, scheme
+
+    def test_wider_ints_monotonically_better(self, key):
+        m, p = self._model(key)
+        xs = [jax.random.normal(jax.random.PRNGKey(i), (32,)) for i in range(4)]
+        errs = {}
+        for scheme in ("SINT", "INT", "DINT"):
+            qp = quantize.quantize_params(m, p, scheme, calibration=xs)
+            errs[scheme] = max(
+                float(jnp.abs(m.apply(qp, x) - m.apply(p, x)).max()) for x in xs)
+        assert errs["DINT"] <= errs["INT"] <= errs["SINT"]
+
+    def test_only_nodes_subset(self, key):
+        """§6.1 isolates a single layer for quantization."""
+        m, p = self._model(key)
+        qp = quantize.quantize_params(m, p, "SINT", only_nodes=[1])
+        assert "qw" in qp[1] and "qw" not in qp[2]
+        assert "w" in qp[2]

@@ -1,0 +1,118 @@
+"""Multipart inference + scan-cycle runtime (§6.3, §7.2)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import layers as L, runtime, sequential
+
+
+def make_model(sizes=(64, 64, 64, 10), in_dim=32, key=0):
+    m = sequential(
+        [L.Input()] + [L.Dense(units=s, activation="relu") for s in sizes],
+        (in_dim,))
+    return m, m.init_params(jax.random.PRNGKey(key))
+
+
+class TestSegmentBoundaries:
+    def test_covers_schedule(self):
+        m, _ = make_model()
+        for n in (1, 2, 3, 5):
+            bounds = runtime.segment_boundaries(m, n)
+            assert bounds[0][0] == 0 and bounds[-1][1] == len(m.graph.nodes)
+            for (a, b), (c, _) in zip(bounds, bounds[1:]):
+                assert b == c and a < b
+
+    def test_clamped_to_node_count(self):
+        m, _ = make_model(sizes=(8,))
+        bounds = runtime.segment_boundaries(m, 10)
+        assert len(bounds) == len(m.graph.nodes)
+
+    def test_flops_roughly_balanced(self):
+        m, _ = make_model(sizes=(64,) * 8)
+        mi_flops = runtime.segment_boundaries(m, 4)
+        flops = list(m.node_flops().values())
+        seg = [sum(flops[a:b]) for a, b in mi_flops]
+        assert max(seg) <= 2.5 * (sum(flops) / 4)
+
+
+class TestMultipart:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 7), st.integers(0, 2**31 - 1))
+    def test_property_multipart_equals_single_shot(self, n_segments, seed):
+        """§6.3: splitting across cycles must not change the output at all."""
+        m, p = make_model(key=seed % 2**32)
+        x = jax.random.normal(jax.random.PRNGKey((seed + 1) % 2**32), (32,))
+        # jit the reference too: segments are jitted, and XLA's fusion may
+        # round f32 differently from eager op-by-op execution
+        ref = jax.jit(m.apply_planned)(p, x)
+        mi = runtime.MultipartInference(m, p, n_segments)
+        out = mi.run_all(x)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_step_api(self):
+        m, p = make_model()
+        mi = runtime.MultipartInference(m, p, 3)
+        x = jnp.ones((32,))
+        state = mi.start(x)
+        steps = 0
+        while not state.finished(mi.n_segments):
+            state = mi.step(state)
+            steps += 1
+        assert steps == mi.n_segments
+        out = mi.output(state)
+        assert out.shape == (10,)
+
+    def test_step_after_finish_raises(self):
+        m, p = make_model()
+        mi = runtime.MultipartInference(m, p, 2)
+        state = mi.start(jnp.ones((32,)))
+        state = mi.step(mi.step(state))
+        try:
+            mi.step(state)
+            assert False, "expected RuntimeError"
+        except RuntimeError:
+            pass
+
+    def test_output_before_finish_raises(self):
+        m, p = make_model()
+        mi = runtime.MultipartInference(m, p, 2)
+        state = mi.start(jnp.ones((32,)))
+        try:
+            mi.output(state)
+            assert False, "expected RuntimeError"
+        except RuntimeError:
+            pass
+
+
+class TestScanCycleRuntime:
+    def test_control_plus_detection(self):
+        m, p = make_model(sizes=(16, 8, 2), in_dim=20)
+        det = runtime.SlidingWindowDetector(m, p, window=10, n_features=2,
+                                            n_segments=2)
+        calls = []
+
+        def control(reading, state):
+            calls.append(reading)
+            return np.array([reading.sum()]), state
+
+        rt = runtime.ScanCycleRuntime(control, det)
+        stream = [np.ones(2, np.float32) * i for i in range(40)]
+        log = rt.run(stream)
+        assert len(log.cycle_times_s) == 40
+        assert len(calls) == 40
+        # window (10) fills, then inferences complete every 2 cycles
+        assert log.summary()["n_inferences"] >= 10
+
+    def test_detector_latency_counts_cycles(self):
+        m, p = make_model(sizes=(16, 2), in_dim=20)
+        det = runtime.SlidingWindowDetector(m, p, window=10, n_features=2,
+                                            n_segments=3)
+        for i in range(10):
+            det.push(np.zeros(2, np.float32))
+        results = [det.tick(c) for c in range(10)]
+        done = [r for r in results if r is not None]
+        assert done and all(lat == 3 for _, _, lat in done)

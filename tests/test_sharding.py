@@ -1,0 +1,137 @@
+"""Sharding rules + sim tests (single device: rules are pure functions)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_host_mesh
+
+
+class FakeMesh:
+    """Just enough of a Mesh for the pure rule functions."""
+    def __init__(self, data=16, model=16):
+        self.shape = {"data": data, "model": model}
+        self.axis_names = tuple(self.shape)
+
+
+@pytest.fixture
+def mesh():
+    return FakeMesh()
+
+
+class TestParamSpecRules:
+    def test_embed_sharded_on_vocab(self, mesh):
+        cfg = get_config("qwen3_8b")
+        spec = sh.param_spec("embed/emb", (151936, 4096), cfg, mesh)
+        assert spec == P("model", None)
+
+    def test_qkv_out_dim(self, mesh):
+        cfg = get_config("qwen3_8b")
+        assert sh.param_spec("blocks/attn/wq/w", (36, 4096, 4096), cfg, mesh) \
+            == P(None, None, "model")
+        assert sh.param_spec("blocks/attn/wo/w", (36, 4096, 4096), cfg, mesh) \
+            == P(None, "model", None)
+
+    def test_mlp_dims(self, mesh):
+        cfg = get_config("qwen3_8b")
+        assert sh.param_spec("blocks/ffn/w_up/w", (36, 4096, 12288), cfg, mesh) \
+            == P(None, None, "model")
+        assert sh.param_spec("blocks/ffn/w_down/w", (36, 12288, 4096), cfg, mesh) \
+            == P(None, "model", None)
+
+    def test_moe_expert_sharding_divisible(self, mesh):
+        cfg = get_config("granite_moe_1b_a400m")  # 32 experts
+        spec = sh.param_spec("blocks/ffn/w_gate", (24, 32, 1024, 512), cfg, mesh)
+        assert spec == P(None, "model", None, None)
+
+    def test_moe_expert_fallback_hidden(self, mesh):
+        cfg = get_config("mixtral_8x22b")  # 8 experts < 16-way axis
+        spec = sh.param_spec("blocks/ffn/w_gate", (56, 8, 6144, 16384), cfg, mesh)
+        assert spec == P(None, None, None, "model")
+        spec_d = sh.param_spec("blocks/ffn/w_down", (56, 8, 16384, 6144), cfg, mesh)
+        assert spec_d == P(None, None, "model", None)
+
+    def test_norms_replicated(self, mesh):
+        cfg = get_config("qwen3_8b")
+        assert sh.param_spec("blocks/ln1/g", (36, 4096), cfg, mesh) == P(None, None)
+
+    def test_hybrid_double_stack(self, mesh):
+        cfg = get_config("jamba_1_5_large_398b")
+        spec = sh.param_spec("blocks/mamba/mixer/in_proj/w",
+                             (9, 7, 8192, 35072), cfg, mesh)
+        assert spec == P(None, None, None, "model")
+
+    def test_router_replicated(self, mesh):
+        cfg = get_config("mixtral_8x22b")
+        assert sh.param_spec("blocks/ffn/router", (56, 6144, 8), cfg, mesh) \
+            == P(None, None, None)
+
+
+class TestSanitize:
+    def test_nondivisible_dropped(self, mesh):
+        spec = sh.sanitize(P("model", None), (50280, 1024), mesh)
+        assert spec == P(None, None)
+
+    def test_divisible_kept(self, mesh):
+        spec = sh.sanitize(P("model", None), (65536, 1024), mesh)
+        assert spec == P("model", None)
+
+    def test_tuple_axes(self, mesh):
+        spec = sh.sanitize(P(("data", "model"), None), (256, 8), mesh)
+        assert spec == P(("data", "model"), None)
+        spec2 = sh.sanitize(P(("data", "model"), None), (100, 8), mesh)
+        assert spec2 == P(None, None)
+
+
+class TestCacheShardings:
+    def test_kv_context_parallel(self, mesh):
+        cfg = get_config("qwen3_8b")
+        specs = {"k": jax.ShapeDtypeStruct((36, 128, 32768, 8, 128), jnp.bfloat16),
+                 "v": jax.ShapeDtypeStruct((36, 128, 32768, 8, 128), jnp.bfloat16)}
+        out = sh.cache_shardings(specs, cfg, MeshWrap(), batch_size=128)
+        assert out["k"].spec == P(None, "data", "model", None, None)
+
+    def test_long_batch1_uses_both_axes(self):
+        cfg = get_config("mamba2_370m")
+        specs = {"ssm": jax.ShapeDtypeStruct((48, 1, 32, 64, 128), jnp.float32)}
+        out = sh.cache_shardings(specs, cfg, MeshWrap(), batch_size=1)
+        # heads on model; batch 1 replicated
+        assert out["ssm"].spec[2] == "model"
+
+
+class MeshWrap:
+    """Real 1x1 host mesh won't validate 16-way specs; use a device-free
+    stand-in that NamedSharding accepts via the real Mesh API."""
+    def __new__(cls):
+        import numpy as np
+        devs = np.array(jax.devices()[:1]).reshape(1, 1)
+        return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+class TestEndToEndHostMesh:
+    def test_train_step_on_1x1_mesh(self):
+        """The full pjit path (shardings, constraints, donation) on the local
+        device — semantics identical, sizes tiny."""
+        from repro.launch.steps import make_optimizer, make_train_step
+        from repro.models import get_model
+
+        cfg = get_config("qwen3_8b").reduced()
+        api = get_model(cfg)
+        mesh = make_host_mesh()
+        sh.install_hook(mesh, batch_sharded=True)
+        try:
+            p_shard = sh.param_shardings(api.param_specs(), cfg, mesh)
+            params = jax.device_put(api.init(jax.random.PRNGKey(0)), p_shard)
+            opt_init, opt_update = make_optimizer()
+            opt = opt_init(params)
+            step = jax.jit(make_train_step(api, opt_update), donate_argnums=(0, 1))
+            batch = api.init_batch("train", 2, 32, jax.random.PRNGKey(1))
+            with mesh:
+                params, opt, metrics = step(params, opt, batch)
+            assert np.isfinite(float(metrics["loss"]))
+        finally:
+            sh.install_hook(None)

@@ -1,0 +1,141 @@
+"""End-to-end behaviour tests for the paper's system (§4.3 pipeline + §6
+optimizations wired together), plus training-loop integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (MultipartInference, layers as L, porting, prune,
+                        quantize, sequential)
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.steps import make_optimizer, make_train_step
+from repro.models import get_model
+
+
+class TestPortingPipeline:
+    """§4.3: train -> extract -> binary -> reconstruct -> load -> infer."""
+
+    def test_end_to_end_with_quantization_and_multipart(self, tmp_path, key):
+        trained = sequential(
+            [L.Input(),
+             L.Dense(units=64, activation="relu"),
+             L.Dense(units=32, activation="relu"),
+             L.Dense(units=2, activation="linear")], (400,))
+        params = trained.init_params(key)
+
+        ported, pparams = porting.port_mlp(trained, params, str(tmp_path))
+        x = jax.random.normal(jax.random.PRNGKey(2), (400,)) * 0.5
+
+        # 1. port is lossless ('without sacrificing inference accuracy')
+        np.testing.assert_array_equal(np.asarray(trained.apply(params, x)),
+                                      np.asarray(ported.apply(pparams, x)))
+
+        # 2. quantize (§6.1) — output stays close
+        qparams = quantize.quantize_params(ported, pparams, "SINT",
+                                           calibration=[x])
+        ref, q = ported.apply(pparams, x), ported.apply(qparams, x)
+        assert float(jnp.abs(ref - q).max()) < 0.2
+
+        # 3. multipart (§6.3) on the quantized model — exact vs single shot
+        mi = MultipartInference(ported, qparams, 3)
+        np.testing.assert_array_equal(np.asarray(mi.run_all(x)),
+                                      np.asarray(ported.apply_planned(qparams, x)))
+
+    def test_pruned_model_still_ports(self, tmp_path, key):
+        m = sequential([L.Input(), L.Dense(units=128, activation="relu"),
+                        L.Dense(units=2)], (128,))
+        p = m.init_params(key)
+        p = prune.prune_model(m, p, 0.5)
+        ported, pp = porting.port_mlp(m, p, str(tmp_path))
+        assert prune.sparsity_of(pp[1]["w"]) >= 0.49
+
+
+class TestTrainingIntegration:
+    """Train a reduced model on the synthetic stream: loss must drop."""
+
+    @pytest.mark.slow
+    def test_loss_decreases(self):
+        cfg = get_config("qwen3_8b").reduced()
+        api = get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        opt_init, opt_update = make_optimizer(3e-3, warmup=5, steps=60)
+        opt = opt_init(params)
+        step = jax.jit(make_train_step(api, opt_update), donate_argnums=(0, 1))
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                      global_batch=8, seed=0)).batches()
+        losses = []
+        for _ in range(40):
+            b = next(data)
+            params, opt, m = step(params, opt,
+                                  {k: jnp.asarray(v) for k, v in b.items()})
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
+
+    def test_checkpoint_resume_bitexact(self, tmp_path):
+        from repro.checkpoint import restore, save
+        cfg = get_config("mamba2_370m").reduced()
+        api = get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        opt_init, opt_update = make_optimizer()
+        opt = opt_init(params)
+        step = jax.jit(make_train_step(api, opt_update))
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                      global_batch=4, seed=0)).batches()
+        batches = [next(data) for _ in range(4)]
+
+        def run(params, opt, batches):
+            for b in batches:
+                params, opt, m = step(params, opt,
+                                      {k: jnp.asarray(v) for k, v in b.items()})
+            return params, opt, float(m["loss"])
+
+        params1, opt1, _ = run(params, opt, batches[:2])
+        save(str(tmp_path), 2, {"params": params1})
+        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            {"params": params1})
+        params1r = restore(str(tmp_path), like)["params"]
+        _, _, loss_a = run(params1, opt1, batches[2:])
+        _, _, loss_b = run(params1r, opt1, batches[2:])
+        assert loss_a == loss_b
+
+
+class TestQuantizedServing:
+    def test_quantized_decode_close_to_fp(self):
+        """ICSML quantization as a first-class serving feature on a big-arch
+        (reduced) model: int8 weights, finite logits, mostly-agreeing argmax."""
+        cfg = get_config("qwen3_8b").reduced().with_(dtype=jnp.float32)
+        api_fp = get_model(cfg)
+        params = api_fp.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+
+        from repro.models import transformer as tf
+        fp_logits = tf.forward_logits(params, cfg, toks)
+
+        from repro.core.quantize import quantize_tensor
+
+        n_layers = cfg.n_layers
+
+        def quantize_tree(t):
+            if isinstance(t, dict):
+                if "w" in t and t["w"].ndim == 3 and "g" not in t:
+                    # stacked (L, in, out): per-layer scales keep every leaf
+                    # with a leading L axis so lax.scan can slice them
+                    def qfn(w):
+                        qt = quantize_tensor(w, "SINT")
+                        return qt.q, qt.scale
+                    q, scale = jax.vmap(qfn)(t["w"].astype(jnp.float32))
+                    out = {k: v for k, v in t.items() if k != "w"}
+                    out.update(qw=q, w_scale=scale,
+                               x_scale=jnp.full((n_layers,), 0.05, jnp.float32))
+                    return out
+                return {k: quantize_tree(v) for k, v in t.items()}
+            return t
+
+        qparams = dict(params)
+        qparams["blocks"] = quantize_tree(params["blocks"])
+        q_logits = tf.forward_logits(qparams, cfg, toks)
+        agree = float(jnp.mean(jnp.argmax(fp_logits, -1) == jnp.argmax(q_logits, -1)))
+        assert agree >= 0.5
+        assert np.isfinite(np.asarray(q_logits)).all()
