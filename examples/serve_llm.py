@@ -1,11 +1,13 @@
 """Serving example: batched requests against a reduced assigned architecture,
 with the paper's optimizations as switches (deliverable b).
 
-  --quant SINT   int8 weights through the qmatmul path (§6.1)
-  --kv-quant     int8 KV cache (§6.1 applied to serving state)
-  --cyclic N     multipart decode, N layer-segments per scan cycle (§6.3)
+  --engine continuous   per-slot continuous batching (serving/continuous.py)
+  --quant SINT          int8 weights through the qmatmul path (§6.1)
+  --kv-quant            int8 KV cache (§6.1 applied to serving state)
+  --cyclic N            multipart decode, N layer-segments per cycle (§6.3);
+                        with --engine continuous, segments compose with slots
 
-Run:  PYTHONPATH=src python examples/serve_llm.py --arch qwen3_8b --cyclic 3
+Run:  PYTHONPATH=src python examples/serve_llm.py --arch qwen3_8b --engine continuous
 """
 
 import argparse
@@ -21,14 +23,16 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import get_model
-from repro.serving import CyclicDecoder, Engine, Request
+from repro.serving import ContinuousEngine, CyclicDecoder, Engine, Request
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3_8b")
+    ap.add_argument("--engine", choices=("wave", "continuous"), default="wave")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--quant", choices=("SINT", "INT", "DINT"))
     ap.add_argument("--kv-quant", action="store_true")
     ap.add_argument("--cyclic", type=int, default=0)
@@ -50,7 +54,7 @@ def main():
         extras["frames"] = jnp.zeros((4, cfg.encoder_frames, cfg.d_model), cfg.dtype)
 
     rng = np.random.default_rng(0)
-    if args.cyclic:
+    if args.cyclic and args.engine == "wave":
         batch = {"tokens": jnp.asarray(
             rng.integers(0, cfg.vocab, 8).astype(np.int32)[None]),
             **{k: v[:1] for k, v in extras.items()}}
@@ -66,9 +70,23 @@ def main():
         print("tokens:", toks)
         return
 
-    engine = Engine(api, params, batch_slots=4, cache_len=128, extras=extras)
     reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
-                    max_new_tokens=args.max_new) for i in range(args.requests)]
+                    max_new_tokens=args.max_new, temperature=args.temperature)
+            for i in range(args.requests)]
+    if args.engine == "continuous":
+        engine = ContinuousEngine(api, params, batch_slots=4, cache_len=128,
+                                  cyclic_segments=args.cyclic)
+        for c in engine.serve(reqs):
+            print(f"req {c.uid}: prefill {c.prefill_s * 1e3:.0f}ms "
+                  f"finished {c.finished_s * 1e3:.0f}ms "
+                  f"tokens={c.tokens[:10].tolist()}...")
+        st = engine.last_stats
+        print(f"continuous{f' x {args.cyclic}-part' if args.cyclic else ''}: "
+              f"{st.steps} steps, {st.admitted} requests, "
+              f"{st.wall_s:.2f}s wall")
+        return
+
+    engine = Engine(api, params, batch_slots=4, cache_len=128, extras=extras)
     for c in engine.serve(reqs):
         print(f"req {c.uid}: prefill {c.prefill_s * 1e3:.0f}ms "
               f"{c.tokens_per_s:.1f} tok/s  tokens={c.tokens[:10].tolist()}...")

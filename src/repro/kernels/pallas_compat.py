@@ -1,0 +1,6 @@
+"""Compatibility shims for Pallas API renames across jax versions."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; accept either.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

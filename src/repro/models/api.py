@@ -7,8 +7,13 @@ smoke tests are architecture-agnostic:
   init(key) -> params
   loss(params, batch) -> scalar                       (train)
   prefill(params, batch, cache_len) -> (cache, logits)
-  decode(params, cache, batch, pos) -> (cache, logits)
+  decode(params, cache, batch, pos) -> (cache, logits)       pos: () scalar
+  decode_multi(params, cache, batch, pos) -> (cache, logits) pos: (B,) per-slot
   cache_specs(batch, cache_len) -> pytree of ShapeDtypeStruct
+
+``decode`` advances every batch row at one shared position (wave batching);
+``decode_multi`` advances each row at its own position — the signature the
+continuous-batching engine (serving/continuous.py) schedules slots with.
 
 Batch layouts per family (``batch_specs`` builds ShapeDtypeStruct stand-ins;
 the data pipeline builds real ones):
@@ -42,6 +47,7 @@ class ModelAPI:
     loss: Callable[[Params, Batch], jax.Array]
     prefill: Callable[[Params, Batch, int], Tuple[Any, jax.Array]]
     decode: Callable[[Params, Any, Batch, jax.Array], Tuple[Any, jax.Array]]
+    decode_multi: Callable[[Params, Any, Batch, jax.Array], Tuple[Any, jax.Array]]
     cache_specs: Callable[[int, int], Any]
     init_cache: Callable[[int, int], Any]
     batch_specs: Callable[[str, int, int], Batch]
@@ -117,6 +123,7 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
         loss = lambda p, b: transformer.loss_fn(p, cfg, b)
         pre = lambda p, b, cl: transformer.prefill(p, cfg, b["tokens"], cl)
         dec = lambda p, c, b, pos: transformer.decode_step(p, cfg, c, b["tokens"], pos)
+        dec_multi = lambda p, c, b, pos: transformer.decode_step_multi(p, cfg, c, b["tokens"], pos)
         cspec = lambda bsz, cl: transformer.cache_spec(cfg, bsz, cl)
         icache = lambda bsz, cl: transformer.init_cache(cfg, bsz, cl)
         bspec = _token_batch_specs(cfg)
@@ -126,6 +133,7 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
         loss = lambda p, b: moe.loss_fn(p, cfg, b)
         pre = lambda p, b, cl: moe.prefill(p, cfg, b["tokens"], cl)
         dec = lambda p, c, b, pos: moe.decode_step(p, cfg, c, b["tokens"], pos)
+        dec_multi = lambda p, c, b, pos: moe.decode_step_multi(p, cfg, c, b["tokens"], pos)
         cspec = lambda bsz, cl: moe.cache_spec(cfg, bsz, cl)
         icache = lambda bsz, cl: moe.init_cache(cfg, bsz, cl)
         bspec = _token_batch_specs(cfg)
@@ -135,6 +143,7 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
         loss = lambda p, b: mamba2.loss_fn(p, cfg, b)
         pre = lambda p, b, cl: mamba2.prefill(p, cfg, b["tokens"], cl)
         dec = lambda p, c, b, pos: mamba2.decode_step(p, cfg, c, b["tokens"], pos)
+        dec_multi = lambda p, c, b, pos: mamba2.decode_step_multi(p, cfg, c, b["tokens"], pos)
         cspec = lambda bsz, cl: mamba2.cache_spec(cfg, bsz, cl)
         icache = lambda bsz, cl: mamba2.init_cache(cfg, bsz, cl)
         bspec = _token_batch_specs(cfg)
@@ -144,6 +153,7 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
         loss = lambda p, b: hybrid.loss_fn(p, cfg, b)
         pre = lambda p, b, cl: hybrid.prefill(p, cfg, b["tokens"], cl)
         dec = lambda p, c, b, pos: hybrid.decode_step(p, cfg, c, b["tokens"], pos)
+        dec_multi = lambda p, c, b, pos: hybrid.decode_step_multi(p, cfg, c, b["tokens"], pos)
         cspec = lambda bsz, cl: hybrid.cache_spec(cfg, bsz, cl)
         icache = lambda bsz, cl: hybrid.init_cache(cfg, bsz, cl)
         bspec = _token_batch_specs(cfg)
@@ -153,6 +163,7 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
         loss = lambda p, b: vlm.loss_fn(p, cfg, b)
         pre = lambda p, b, cl: vlm.prefill(p, cfg, b, cl)
         dec = lambda p, c, b, pos: vlm.decode_step(p, cfg, c, b["tokens"], pos)
+        dec_multi = lambda p, c, b, pos: vlm.decode_step_multi(p, cfg, c, b["tokens"], pos)
         cspec = lambda bsz, cl: vlm.cache_spec(cfg, bsz, cl)
         icache = lambda bsz, cl: vlm.init_cache(cfg, bsz, cl)
         bspec = _vlm_batch_specs(cfg)
@@ -162,6 +173,7 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
         loss = lambda p, b: whisper.loss_fn(p, cfg, b)
         pre = lambda p, b, cl: whisper.prefill(p, cfg, b["frames"], b["tokens"], cl)
         dec = lambda p, c, b, pos: whisper.decode_step(p, cfg, c, b["tokens"], pos)
+        dec_multi = lambda p, c, b, pos: whisper.decode_step_multi(p, cfg, c, b["tokens"], pos)
         cspec = lambda bsz, cl: whisper.cache_spec(cfg, bsz, cl)
         icache = lambda bsz, cl: whisper.init_cache(cfg, bsz, cl)
         bspec = _audio_batch_specs(cfg)
@@ -173,6 +185,6 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
 
     return ModelAPI(
         cfg=cfg, init=init, param_specs=param_specs, loss=loss,
-        prefill=pre, decode=dec, cache_specs=cspec, init_cache=icache,
-        batch_specs=bspec,
+        prefill=pre, decode=dec, decode_multi=dec_multi, cache_specs=cspec,
+        init_cache=icache, batch_specs=bspec,
     )

@@ -165,7 +165,7 @@ def gqa_attention(
     q: jax.Array,            # (B, Sq, H, D)
     k: jax.Array,            # (B, Sk, K, D)
     v: jax.Array,            # (B, Sk, K, D)
-    mask: jax.Array,         # (Sq, Sk) bool
+    mask: jax.Array,         # (Sq, Sk) bool, or (B, Sq, Sk) per-row
 ) -> jax.Array:
     """Grouped-query attention; softmax in f32. Returns (B, Sq, H, D)."""
     b, sq, h, d = q.shape
@@ -174,7 +174,10 @@ def gqa_attention(
     qg = q.reshape(b, sq, kheads, g, d)
     scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
     scores = scores / np.sqrt(d)
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if mask.ndim == 3:
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
+    else:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
     return out.reshape(b, sq, h, d)
@@ -313,6 +316,61 @@ def attn_decode(
         mask &= k_pos > pos - window
     mask2d = mask[None, :]  # (1, Smax)
     out = gqa_attention(q, k_full, v_full, mask2d)
+    return linear(p["wo"], out.reshape(b, 1, -1)), new_cache
+
+
+def attn_decode_multi(
+    p: Params, a: AttnConfig, x: jax.Array, pos: jax.Array,
+    cache: Tuple[jax.Array, ...],
+    *, window_override: Optional[int] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """One-token decode with **per-row** positions (continuous batching).
+
+    x: (B, 1, d_model); pos: (B,) — each batch slot sits at its own position
+    in the shared cache, so slots admitted at different times decode in one
+    fixed-shape step.  Cache layouts as in :func:`attn_decode`; each row's
+    new K/V lands at its own ``pos[b]`` and each row gets its own causal
+    (and optional sliding-window) mask.
+    """
+    window = window_override if window_override is not None else a.window
+    b = x.shape[0]
+    q, k, v = attn_qkv(p, a, x, pos[:, None])
+    quantized = len(cache) == 4
+
+    def upd_kv(full, new):      # full (B, Smax, K, D), new (B, 1, K, D)
+        return jax.vmap(
+            lambda c, n, pp: jax.lax.dynamic_update_slice(c, n, (pp, 0, 0))
+        )(full, new, pos)
+
+    def upd_scale(full, new):   # full (B, Smax, K), new (B, 1, K)
+        return jax.vmap(
+            lambda c, n, pp: jax.lax.dynamic_update_slice(c, n, (pp, 0))
+        )(full, new, pos)
+
+    if quantized:
+        k_cache, v_cache, ks_cache, vs_cache = cache
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        k_cache = upd_kv(k_cache, kq)
+        v_cache = upd_kv(v_cache, vq)
+        ks_cache = upd_scale(ks_cache, ks)
+        vs_cache = upd_scale(vs_cache, vs)
+        k_full = k_cache.astype(q.dtype) * ks_cache[..., None].astype(q.dtype)
+        v_full = v_cache.astype(q.dtype) * vs_cache[..., None].astype(q.dtype)
+        new_cache: Tuple[jax.Array, ...] = (k_cache, v_cache, ks_cache, vs_cache)
+    else:
+        k_cache, v_cache = cache
+        k_cache = upd_kv(k_cache, k)
+        v_cache = upd_kv(v_cache, v)
+        k_full, v_full = k_cache, v_cache
+        new_cache = (k_cache, v_cache)
+
+    s_max = k_full.shape[1]
+    k_pos = jnp.arange(s_max, dtype=jnp.int32)
+    mask = k_pos[None, :] <= pos[:, None]              # (B, Smax)
+    if window is not None:
+        mask &= k_pos[None, :] > pos[:, None] - window
+    out = gqa_attention(q, k_full, v_full, mask[:, None, :])
     return linear(p["wo"], out.reshape(b, 1, -1)), new_cache
 
 

@@ -164,15 +164,16 @@ def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> Dict[str, Any]:
 
 
 def super_block_decode(sb: Params, cfg: ArchConfig, x: jax.Array,
-                       pos: jax.Array, kv, mamba_cache
+                       pos: jax.Array, kv, mamba_cache, *, multi: bool = False
                        ) -> Tuple[jax.Array, Any, Any]:
     period, attn_pos, *_ = _layout(cfg)
+    attn_step = cm.attn_decode_multi if multi else cm.attn_decode
     mamba_j = 0
     new_conv, new_ssm = [], []
     for i in range(period):
         if i == attn_pos:
             h = cm.rmsnorm(sb["attn"]["ln"], x)
-            a, kv = cm.attn_decode(sb["attn"]["attn"], _attn_cfg(cfg), h, pos, kv)
+            a, kv = attn_step(sb["attn"]["attn"], _attn_cfg(cfg), h, pos, kv)
             x = x + a
         else:
             p = _take(sb["mamba"], mamba_j)
@@ -187,14 +188,13 @@ def super_block_decode(sb: Params, cfg: ArchConfig, x: jax.Array,
     return x, kv, new_mamba
 
 
-def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
-                tokens: jax.Array, pos: jax.Array
-                ) -> Tuple[Dict[str, Any], jax.Array]:
+def _decode_step_impl(params, cfg, cache, tokens, pos, multi):
     x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
 
     def body(h, inputs):
         sb, kc, vc, mc = inputs
-        h, (kc, vc), mc = super_block_decode(sb, cfg, h, pos, (kc, vc), mc)
+        h, (kc, vc), mc = super_block_decode(sb, cfg, h, pos, (kc, vc), mc,
+                                             multi=multi)
         return h, (kc, vc, mc)
 
     x, (k, v, mamba) = jax.lax.scan(
@@ -203,6 +203,20 @@ def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
     )
     x = cm.rmsnorm(params["final_norm"], x)
     return {"k": k, "v": v, "mamba": mamba}, cm.unembed(params["embed"], x)
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                tokens: jax.Array, pos: jax.Array
+                ) -> Tuple[Dict[str, Any], jax.Array]:
+    return _decode_step_impl(params, cfg, cache, tokens, pos, multi=False)
+
+
+def decode_step_multi(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                      tokens: jax.Array, pos: jax.Array
+                      ) -> Tuple[Dict[str, Any], jax.Array]:
+    """Per-slot-position decode (pos (B,)): attention layers write/mask per
+    row; the mamba layers are position-free recurrent state."""
+    return _decode_step_impl(params, cfg, cache, tokens, pos, multi=True)
 
 
 def prefill(params: Params, cfg: ArchConfig, tokens: jax.Array, cache_len: int

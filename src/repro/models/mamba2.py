@@ -257,7 +257,11 @@ def _mamba_forward_state(p: Params, cfg: ArchConfig, x: jax.Array
     b, s, _ = x.shape
     zxbcdt = cm.linear(p["in_proj"], x)
     z, xbc_pre, dt_raw = _split_proj(cfg, zxbcdt)
-    conv_state = xbc_pre[:, -(cfg.conv_kernel - 1):, :]
+    # conv state is the last (K-1) inputs, front-padded with zeros for
+    # prompts shorter than the kernel (the stepwise decode's initial state).
+    k1 = cfg.conv_kernel - 1
+    pad = max(k1 - s, 0)
+    conv_state = jnp.pad(xbc_pre, ((0, 0), (pad, 0), (0, 0)))[:, -k1:, :]
     xbc = _causal_conv(p, xbc_pre)
     xs = xbc[..., :d_inner].reshape(b, s, h, cfg.ssm_headdim).astype(jnp.float32)
     bmat = xbc[..., d_inner:d_inner + g * n].reshape(b, s, g, n).astype(jnp.float32)
@@ -299,3 +303,13 @@ def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
     )
     x = cm.rmsnorm(params["final_norm"], x)
     return {"conv": conv, "ssm": ssm}, cm.unembed(params["embed"], x)
+
+
+def decode_step_multi(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                      tokens: jax.Array, pos: jax.Array
+                      ) -> Tuple[Dict[str, Any], jax.Array]:
+    """Per-slot-position decode (pos (B,)).
+
+    The SSM state is recurrent per batch row — positions never index the
+    cache — so the plain step already decodes every slot independently."""
+    return decode_step(params, cfg, cache, tokens, pos)

@@ -236,6 +236,14 @@ def decode_step(params: Params, cfg: ArchConfig, cache, tokens, pos,
                           ffn_apply=make_ffn_apply(cfg, dispatch))
 
 
+def decode_step_multi(params: Params, cfg: ArchConfig, cache, tokens, pos,
+                      dispatch: str = "einsum"):
+    """Per-slot-position decode (pos (B,)) — see transformer.decode_step_multi."""
+    from repro.models import transformer as tf
+    return tf.decode_step_multi(params, cfg, cache, tokens, pos,
+                                ffn_apply=make_ffn_apply(cfg, dispatch))
+
+
 def cache_spec(cfg: ArchConfig, batch: int, cache_len: int):
     from repro.models import transformer as tf
     return tf.cache_spec(cfg, batch, cache_len)

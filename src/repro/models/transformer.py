@@ -109,6 +109,19 @@ def block_decode(blk, cfg, x, pos, kv, ffn_apply):
     return x, kv
 
 
+def block_decode_multi(blk, cfg, x, pos, kv, ffn_apply):
+    """block_decode with per-row positions pos (B,) (continuous batching)."""
+    acfg = _attn_cfg(cfg)
+    h = cm.rmsnorm(blk["ln1"], x)
+    a, kv = cm.attn_decode_multi(blk["attn"], acfg, h, pos, kv)
+    if cfg.parallel_block:
+        x = x + a + ffn_apply(blk["ffn"], h)
+    else:
+        x = x + a
+        x = x + ffn_apply(blk["ffn"], cm.rmsnorm(blk["ln2"], x))
+    return x, kv
+
+
 # ---------------------------------------------------------------------------
 # Full decoder
 # ---------------------------------------------------------------------------
@@ -237,17 +250,14 @@ def prefill(params: Params, cfg: ArchConfig, tokens: jax.Array,
     return {"k": kv[0], "v": kv[1]}, logits
 
 
-def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
-                tokens: jax.Array, pos: jax.Array, ffn_apply=None
-                ) -> Tuple[Dict[str, Any], jax.Array]:
-    """One decode step: tokens (B, 1), pos scalar int32; cache donated."""
+def _decode_step_impl(params, cfg, cache, tokens, pos, ffn_apply, block_step):
     ffn_apply = ffn_apply or (lambda p, h: cm.mlp_forward(p, _mlp_cfg(cfg), h))
     x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
 
     if cfg.kv_quant:
         def body(h, inputs):
             blk, kc, vc, ksc, vsc = inputs
-            h, kv = block_decode(blk, cfg, h, pos, (kc, vc, ksc, vsc), ffn_apply)
+            h, kv = block_step(blk, cfg, h, pos, (kc, vc, ksc, vsc), ffn_apply)
             return h, kv
 
         x, kv = jax.lax.scan(
@@ -261,7 +271,7 @@ def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
 
     def body(h, inputs):
         blk, kc, vc = inputs
-        h, kv = block_decode(blk, cfg, h, pos, (kc, vc), ffn_apply)
+        h, kv = block_step(blk, cfg, h, pos, (kc, vc), ffn_apply)
         return h, kv
 
     x, (k, v) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]),
@@ -269,3 +279,22 @@ def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
     h = cm.rmsnorm(params["final_norm"], x)
     logits = cm.unembed(params["embed"], h)
     return {"k": k, "v": v}, logits
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                tokens: jax.Array, pos: jax.Array, ffn_apply=None
+                ) -> Tuple[Dict[str, Any], jax.Array]:
+    """One decode step: tokens (B, 1), pos scalar int32; cache donated."""
+    return _decode_step_impl(params, cfg, cache, tokens, pos, ffn_apply,
+                             block_decode)
+
+
+def decode_step_multi(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                      tokens: jax.Array, pos: jax.Array, ffn_apply=None
+                      ) -> Tuple[Dict[str, Any], jax.Array]:
+    """One decode step with per-slot positions: tokens (B, 1), pos (B,) int32.
+
+    Each batch slot advances at its own position in the shared cache — the
+    decode signature continuous batching needs (serving/continuous.py)."""
+    return _decode_step_impl(params, cfg, cache, tokens, pos, ffn_apply,
+                             block_decode_multi)

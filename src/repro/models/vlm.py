@@ -64,3 +64,4 @@ def prefill(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
 cache_spec = tf.cache_spec
 init_cache = tf.init_cache
 decode_step = tf.decode_step
+decode_step_multi = tf.decode_step_multi

@@ -247,17 +247,20 @@ def prefill(params: Params, cfg: ArchConfig, frames: jax.Array,
             cm.unembed(params["embed"], x[:, -1:]))
 
 
-def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
-                tokens: jax.Array, pos: jax.Array
-                ) -> Tuple[Dict[str, Any], jax.Array]:
+def _decode_step_impl(params, cfg, cache, tokens, pos, multi):
     acfg = _attn_cfg(cfg)
+    attn_step = cm.attn_decode_multi if multi else cm.attn_decode
     x = cm.embed(params["embed"], tokens).astype(cfg.dtype)
-    x = x + sinusoids(pos[None] if pos.ndim == 0 else pos, cfg.d_model).astype(cfg.dtype)
+    if multi:
+        x = x + sinusoids(pos, cfg.d_model).astype(cfg.dtype)[:, None, :]
+    else:
+        x = x + sinusoids(pos[None] if pos.ndim == 0 else pos,
+                          cfg.d_model).astype(cfg.dtype)
 
     def body(h, inputs):
         blk, kc, vc, xk, xv = inputs
         hn = cm.rmsnorm(blk["ln1"], h)
-        a, (kc, vc) = cm.attn_decode(blk["self_attn"], acfg, hn, pos, (kc, vc))
+        a, (kc, vc) = attn_step(blk["self_attn"], acfg, hn, pos, (kc, vc))
         h = h + a
         h = h + cross_attn_apply(blk["cross"], cfg, cm.rmsnorm(blk["ln_x"], h), xk, xv)
         h = h + cm.mlp_forward(blk["mlp"], _mlp_cfg(cfg), cm.rmsnorm(blk["ln2"], h))
@@ -271,3 +274,17 @@ def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
     x = cm.rmsnorm(params["final_norm"], x)
     return ({"k": k, "v": v, "xk": cache["xk"], "xv": cache["xv"]},
             cm.unembed(params["embed"], x))
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                tokens: jax.Array, pos: jax.Array
+                ) -> Tuple[Dict[str, Any], jax.Array]:
+    return _decode_step_impl(params, cfg, cache, tokens, pos, multi=False)
+
+
+def decode_step_multi(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                      tokens: jax.Array, pos: jax.Array
+                      ) -> Tuple[Dict[str, Any], jax.Array]:
+    """Per-slot-position decode (pos (B,)): self-attention writes/masks per
+    row; cross-attention reads the per-slot encoder KV, position-free."""
+    return _decode_step_impl(params, cfg, cache, tokens, pos, multi=True)

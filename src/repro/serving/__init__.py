@@ -1,4 +1,6 @@
+from repro.serving.continuous import ContinuousEngine, ServeStats
 from repro.serving.cyclic import CyclicDecoder
 from repro.serving.engine import Completion, Engine, Request
 
-__all__ = ["CyclicDecoder", "Completion", "Engine", "Request"]
+__all__ = ["ContinuousEngine", "CyclicDecoder", "Completion", "Engine",
+           "Request", "ServeStats"]

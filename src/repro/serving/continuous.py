@@ -1,0 +1,285 @@
+"""Continuous-batching serving engine: per-slot state inside one jitted step.
+
+The wave engine (serving/engine.py) shares one position counter across the
+batch, so every slot stalls until the wave's longest request finishes.  This
+engine keeps the same ICSML discipline — one statically preallocated KV arena
+(dataMem), donated across steps, no dynamic allocation after construction —
+but tracks **per-slot positions, temperatures, PRNG keys and done-masks**, so
+a slot is re-admitted the moment its occupant retires (EOS or max tokens).
+
+Admission writes a new request's prompt into its slot of the shared cache:
+
+* the dense family prefills ``prompt[:-1]`` right-padded to a fixed bucket
+  length, so admission compiles **once**.  Pad positions land beyond the
+  slot's live region and each decode step overwrites its own position before
+  attending to it, so pads are never observed.
+* ssm/hybrid (recurrent state absorbs pads) and moe (pad tokens would compete
+  for expert capacity) prefill at the exact prompt length instead.
+
+The prefilled single-request cache is inserted along the slot axis, which is
+discovered generically by diffing ``cache_specs`` at two batch sizes — no
+per-family layout knowledge in the engine.
+
+Decode is one fixed-shape jitted step over all slots: ``decode_multi`` (per
+-slot positions) → per-slot temperature sampling → done-masked outputs, with
+the cache and the per-slot state arrays donated.  Optionally the step runs
+through a :class:`~repro.serving.cyclic.CyclicDecoder` so the paper's
+multipart inference (§6.3) composes with continuous slots — each scan cycle
+advances one layer segment for *all* in-flight requests.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelAPI
+from repro.serving.engine import Completion, Request, _truncate_eos, sample_batched
+
+# families whose decode is a pure function of the attention cache: right-
+# padded bucket prefill is safe (pads are overwritten before ever being
+# attended to).  moe is excluded — pad tokens would compete for expert
+# capacity with real tokens during prefill — and uses exact-length prefill.
+# (During *decode*, capacity-grouped MoE routing couples co-scheduled rows;
+# that holds for any batched engine here, wave or continuous.)
+_BUCKET_FAMILIES = ("dense",)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    out: List[int]
+    admitted_s: float         # serve-clock time admission finished
+    prefill_s: float          # wall time of the admission prefill
+
+
+@dataclasses.dataclass
+class ServeStats:
+    steps: int                # jitted decode steps executed
+    admitted: int             # requests admitted into slots
+    wall_s: float             # total serve() wall time
+
+
+def _batch_axes(api: ModelAPI, cache_len: int) -> List[int]:
+    """Per-leaf batch axis of the cache, found by diffing two batch sizes."""
+    s1 = jax.tree.leaves(api.cache_specs(1, cache_len))
+    s2 = jax.tree.leaves(api.cache_specs(2, cache_len))
+    axes = []
+    for a, b in zip(s1, s2):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        assert len(diff) == 1, f"ambiguous batch axis for {a.shape} vs {b.shape}"
+        axes.append(diff[0])
+    return axes
+
+
+class ContinuousEngine:
+    """Slot-scheduled serving over a ModelAPI (continuous batching).
+
+    ``prefill_bucket`` fixes the admission-prefill length for attention-cache
+    families (defaults to cache_len // 2); prompts longer than the bucket fall
+    back to exact-length prefill.  ``cyclic_segments > 0`` routes the decode
+    step through a CyclicDecoder with that many layer segments per cycle.
+    """
+
+    def __init__(self, api: ModelAPI, params: Any, *, batch_slots: int,
+                 cache_len: int, prefill_bucket: Optional[int] = None,
+                 seed: int = 0, cyclic_segments: int = 0):
+        if api.cfg.family in ("vlm", "audio"):
+            raise NotImplementedError(
+                "ContinuousEngine serves token-only families; vlm/audio "
+                "admission needs per-request extras (image_emb/frames) — "
+                "use the wave Engine with `extras` for those.")
+        if cyclic_segments > 0 and api.cfg.kv_quant:
+            raise NotImplementedError(
+                "cyclic_segments does not compose with kv_quant: the "
+                "CyclicDecoder segment cache carries only (k, v), not the "
+                "int8 scales.")
+        self.api = api
+        self.params = params
+        self.batch_slots = batch_slots
+        self.cache_len = cache_len
+        self.seed = seed
+        self._serves = 0          # advances the PRNG stream across serve()s
+        self._bucket = (min(prefill_bucket or max(cache_len // 2, 1), cache_len)
+                        if api.cfg.family in _BUCKET_FAMILIES else None)
+        self._axes = _batch_axes(api, cache_len)
+        self._treedef = jax.tree.structure(api.cache_specs(batch_slots, cache_len))
+        self._zero_slot = api.init_cache(1, cache_len)
+        self.last_stats: Optional[ServeStats] = None
+
+        self._cyclic = None
+        if cyclic_segments > 0:
+            from repro.serving.cyclic import CyclicDecoder
+            self._cyclic = CyclicDecoder(api.cfg, params,
+                                         n_segments=cyclic_segments,
+                                         batch=batch_slots, cache_len=cache_len)
+
+        def _advance(logits, pos, temps, keys, active):
+            """Sample per slot and advance per-slot state (done-masked)."""
+            split = jax.vmap(jax.random.split)(keys)       # (B, 2, 2)
+            new_keys, sub = split[:, 0], split[:, 1]
+            nxt = sample_batched(logits[:, -1], temps, sub)
+            nxt = jnp.where(active, nxt, 0)
+            new_pos = jnp.where(active, pos + 1, pos)
+            return nxt, new_pos, new_keys
+
+        if self._cyclic is None:
+            def _step(params, cache, tokens, pos, temps, keys, active):
+                cache, logits = api.decode_multi(params, cache,
+                                                 {"tokens": tokens}, pos)
+                nxt, new_pos, new_keys = _advance(logits, pos, temps, keys,
+                                                  active)
+                return cache, nxt, new_pos, new_keys
+
+            self._step = jax.jit(_step, donate_argnums=1)
+        else:
+            # multipart: segments are separate jits by design (one bounded
+            # cycle each); only the sample/advance epilogue is fused here.
+            self._advance = jax.jit(_advance)
+            self._step = self._cyclic_step
+
+        def _insert(cache, part, slot):
+            flat_c = jax.tree.leaves(cache)
+            flat_p = jax.tree.leaves(part)
+            out = []
+            for c, p, ax in zip(flat_c, flat_p, self._axes):
+                idx = [jnp.int32(0)] * c.ndim
+                idx[ax] = slot
+                out.append(jax.lax.dynamic_update_slice(c, p.astype(c.dtype),
+                                                        tuple(idx)))
+            return jax.tree.unflatten(self._treedef, out)
+
+        self._insert = jax.jit(_insert, donate_argnums=0)
+        # jitted admission prefill; one compile with a bucket, one per
+        # distinct prompt length on the exact-length fallback.
+        self._prefill = jax.jit(
+            lambda p, t: api.prefill(p, {"tokens": t}, cache_len))
+
+    # -- admission ---------------------------------------------------------
+
+    def _slot_prefill(self, prompt: np.ndarray) -> Any:
+        """Single-request cache for ``prompt[:-1]`` (the last prompt token is
+        fed through the first decode step, which yields the true first-token
+        logits even when the prefill window is right-padded)."""
+        body = prompt[:-1]
+        if len(body) == 0:
+            return self._zero_slot
+        if self._bucket is not None and len(body) <= self._bucket:
+            padded = np.zeros((self._bucket,), np.int32)
+            padded[:len(body)] = body
+            body = padded
+        cache, _ = self._prefill(self.params, jnp.asarray(body[None]))
+        return cache
+
+    def _cyclic_step(self, params, cache, tokens, pos, temps, keys, active):
+        cache, logits = self._cyclic.decode_step_multi(cache, tokens, pos)
+        nxt, new_pos, new_keys = self._advance(logits, pos, temps, keys, active)
+        return cache, nxt, new_pos, new_keys
+
+    # -- serve -------------------------------------------------------------
+
+    def serve(self, requests: Sequence[Request]) -> List[Completion]:
+        """Serve all requests, admitting into slots as they free up.
+
+        Completions are returned in retirement order; ``finished_s`` is the
+        per-request latency from serve() start (all requests are treated as
+        submitted at t0)."""
+        b = self.batch_slots
+        pending = collections.deque(requests)
+        slots: List[Optional[_Slot]] = [None] * b
+        done: List[Completion] = []
+        # fresh sampling stream per serve() call (uid alone would replay)
+        self._serves += 1
+        serve_key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                       self._serves)
+
+        cache = self.api.init_cache(b, self.cache_len)
+        tokens = np.zeros((b, 1), np.int32)
+        pos = jnp.zeros((b,), jnp.int32)
+        temps = np.zeros((b,), np.float32)
+        keys = jnp.tile(jax.random.PRNGKey(self.seed)[None], (b, 1))
+        active = np.zeros((b,), bool)
+        steps = admitted = 0
+        t0 = time.perf_counter()
+
+        while pending or any(s is not None for s in slots):
+            # admit into every free slot
+            pos_h = None
+            for i in range(b):
+                if slots[i] is not None or not pending:
+                    continue
+                r = pending.popleft()
+                plen = len(r.prompt)
+                assert 1 <= plen < self.cache_len, \
+                    f"prompt length {plen} must fit the cache ({self.cache_len})"
+                assert r.max_new_tokens >= 1, \
+                    "max_new_tokens must be >= 1 (every admitted slot decodes)"
+                tp = time.perf_counter()
+                cache = self._insert(cache, self._slot_prefill(r.prompt),
+                                     jnp.int32(i))
+                prefill_s = time.perf_counter() - tp
+                if pos_h is None:
+                    pos_h = np.array(pos)   # mutable host copy
+                pos_h[i] = plen - 1
+                tokens[i, 0] = r.prompt[-1]
+                temps[i] = r.temperature
+                # fold in the admission ordinal too: duplicate uids in one
+                # serve() must not replay the same sample stream
+                keys = keys.at[i].set(jax.random.fold_in(
+                    jax.random.fold_in(serve_key, admitted),
+                    r.uid & 0xFFFFFFFF))
+                active[i] = True
+                admitted += 1
+                slots[i] = _Slot(req=r, out=[],
+                                 admitted_s=time.perf_counter() - t0,
+                                 prefill_s=prefill_s)
+            if pos_h is not None:
+                pos = jnp.asarray(pos_h)
+
+            # one fixed-shape step for every slot
+            cache, nxt, pos, keys = self._step(
+                self.params, cache, jnp.asarray(tokens), pos,
+                jnp.asarray(temps), keys, jnp.asarray(active))
+            steps += 1
+            nxt_h = np.asarray(nxt)
+            pos_after = np.asarray(pos)
+
+            # retire finished occupants, keep the rest decoding
+            for i in range(b):
+                s = slots[i]
+                if s is None:
+                    continue
+                tok = int(nxt_h[i])
+                s.out.append(tok)
+                hit_eos = (s.req.eos_token is not None
+                           and tok == s.req.eos_token)
+                full = len(s.out) >= s.req.max_new_tokens
+                # pos_after is the *next* write index; the last valid cache
+                # position is cache_len - 1
+                wall = int(pos_after[i]) >= self.cache_len
+                if hit_eos or full or wall:
+                    t_done = time.perf_counter() - t0
+                    done.append(Completion(
+                        uid=s.req.uid,
+                        tokens=_truncate_eos(
+                            np.asarray(s.out, np.int32), s.req.eos_token),
+                        prefill_s=s.prefill_s,
+                        decode_s=t_done - s.admitted_s,
+                        finished_s=t_done,
+                    ))
+                    slots[i] = None
+                    active[i] = False
+                    temps[i] = 0.0
+                    tokens[i, 0] = 0
+                else:
+                    tokens[i, 0] = tok
+
+        self.last_stats = ServeStats(steps=steps, admitted=admitted,
+                                     wall_s=time.perf_counter() - t0)
+        return done

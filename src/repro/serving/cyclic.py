@@ -76,6 +76,10 @@ class CyclicDecoder:
                     return hh + out, (nc["conv"], nc["ssm"])
                 h, (conv, ssm) = jax.lax.scan(body, h, (blocks, conv_c, ssm_c))
                 return h, (conv, ssm)
+
+            # SSM state is position-free: one segment fn serves both the
+            # shared-position and the per-slot-position (continuous) paths.
+            seg_fn_multi = seg_fn
         else:
             fa = ffn_apply or (lambda p, hh: cm.mlp_forward(
                 p, tf._mlp_cfg(cfg), hh))
@@ -88,15 +92,30 @@ class CyclicDecoder:
                 h, (k, v) = jax.lax.scan(body, h, (blocks, k_c, v_c))
                 return h, (k, v)
 
+            def seg_fn_multi(blocks, k_c, v_c, h, pos):
+                def body(hh, inputs):
+                    blk, kc, vc = inputs
+                    hh, kv = tf.block_decode_multi(blk, cfg, hh, pos,
+                                                   (kc, vc), fa)
+                    return hh, kv
+                h, (k, v) = jax.lax.scan(body, h, (blocks, k_c, v_c))
+                return h, (k, v)
+
         self._seg = jax.jit(seg_fn)
+        self._seg_multi = jax.jit(seg_fn_multi)
 
         def head(params, h):
             h = cm.rmsnorm(params["final_norm"], h)
             return jnp.argmax(cm.unembed(params["embed"], h)[:, -1], -1).astype(jnp.int32)
 
+        def logits_head(params, h):
+            h = cm.rmsnorm(params["final_norm"], h)
+            return cm.unembed(params["embed"], h)
+
         self._embed = jax.jit(lambda params, tok: cm.embed(params["embed"], tok)
                               .astype(cfg.dtype))
         self._head = jax.jit(head)
+        self._logits_head = jax.jit(logits_head)
 
     def _cache_parts(self, cache):
         if self.cfg.family == "ssm":
@@ -107,6 +126,27 @@ class CyclicDecoder:
         if self.cfg.family == "ssm":
             return {"conv": parts[0], "ssm": parts[1]}
         return dict(cache, k=parts[0], v=parts[1])
+
+    def decode_step_multi(self, cache: Any, tokens: jax.Array, pos: jax.Array
+                          ) -> Tuple[Any, jax.Array]:
+        """One multipart decode step with per-slot positions.
+
+        tokens (B, 1), pos (B,) int32 — the continuous engine's step executed
+        as ``n_segments`` bounded scan cycles, each advancing one layer block
+        for **all** in-flight slots.  Returns (cache, logits (B, 1, V)) —
+        the same contract as ``ModelAPI.decode_multi``."""
+        h = self._embed(self.params, tokens)
+        parts = self._cache_parts(cache)
+        pos = jnp.asarray(pos, jnp.int32)
+        for (a, b) in self.bounds:
+            seg_blocks = _slice_tree(self.params["blocks"], a, b)
+            seg_parts = tuple(_slice_tree(p, a, b) for p in parts)
+            h, new_parts = self._seg_multi(seg_blocks, *seg_parts, h, pos)
+            parts = tuple(
+                _update_tree(full, new, a)
+                for full, new in zip(parts, new_parts)
+            )
+        return self._rebuild_cache(cache, parts), self._logits_head(self.params, h)
 
     def decode_tokens(
         self, cache: Any, first_token: jax.Array, start_pos: int, n_tokens: int,

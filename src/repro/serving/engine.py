@@ -9,9 +9,10 @@ The ICSML discipline applied to serving (DESIGN.md §2):
 * requests are admitted in waves (static batching): all slots share the
   position counter, exactly like the PLC scan cycle shares one clock.
 
-`CyclicEngine` (serving/cyclic.py) additionally splits each decode step into
+`CyclicDecoder` (serving/cyclic.py) additionally splits each decode step into
 per-cycle layer segments — the paper's multipart inference (§6.3) for big
-models.
+models.  `ContinuousEngine` (serving/continuous.py) replaces the shared wave
+clock with per-slot positions so slots retire and re-admit independently.
 """
 
 from __future__ import annotations
@@ -33,6 +34,7 @@ class Request:
     prompt: np.ndarray            # (prompt_len,) int32
     max_new_tokens: int
     temperature: float = 0.0      # 0 => greedy
+    eos_token: Optional[int] = None   # retire early when sampled
 
 
 @dataclasses.dataclass
@@ -41,6 +43,7 @@ class Completion:
     tokens: np.ndarray
     prefill_s: float
     decode_s: float
+    finished_s: float = 0.0       # wall time from serve() start to retirement
 
     @property
     def tokens_per_s(self) -> float:
@@ -48,32 +51,46 @@ class Completion:
         return n / self.decode_s if self.decode_s > 0 else float("inf")
 
 
-def sample(logits: jax.Array, temperature: float, key: jax.Array) -> jax.Array:
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+def sample_batched(logits: jax.Array, temperatures: jax.Array,
+                   keys: jax.Array) -> jax.Array:
+    """Per-row sampling: logits (B, V), temperatures (B,), keys (B, 2).
+
+    Rows with temperature <= 0 take the argmax; others sample from their own
+    temperature-scaled distribution with their own PRNG key."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temperatures, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temperatures > 0.0, sampled, greedy)
+
+
+def _truncate_eos(tokens: np.ndarray, eos: Optional[int]) -> np.ndarray:
+    if eos is None:
+        return tokens
+    hits = np.flatnonzero(tokens == eos)
+    return tokens[: hits[0] + 1] if hits.size else tokens
 
 
 class Engine:
     """Wave-batched serving over a ModelAPI."""
 
     def __init__(self, api: ModelAPI, params: Any, *, batch_slots: int,
-                 cache_len: int, extras: Optional[Dict[str, jax.Array]] = None):
+                 cache_len: int, extras: Optional[Dict[str, jax.Array]] = None,
+                 seed: int = 0):
         self.api = api
         self.params = params
         self.batch_slots = batch_slots
         self.cache_len = cache_len
         self.extras = extras or {}
+        self._key = jax.random.PRNGKey(seed)
 
-        def _decode(params, cache, tokens, pos, key, temperature):
+        def _decode(params, cache, tokens, pos, keys, temperatures):
             batch = {"tokens": tokens, **self.extras}
             cache, logits = api.decode(params, cache, batch, pos)
-            nxt = sample(logits[:, -1], temperature, key)
+            nxt = sample_batched(logits[:, -1], temperatures, keys)
             return cache, nxt
 
         # cache donated: the static arena is updated in place step to step
-        self._decode = jax.jit(_decode, donate_argnums=1,
-                               static_argnames=("temperature",))
+        self._decode = jax.jit(_decode, donate_argnums=1)
 
     def run_wave(self, requests: Sequence[Request]) -> List[Completion]:
         """Serve one wave of ≤ batch_slots requests (right-padded prompts)."""
@@ -81,42 +98,66 @@ class Engine:
         reqs = list(requests)
         b = self.batch_slots
         plen = max(len(r.prompt) for r in reqs)
+        max_new = max(r.max_new_tokens for r in reqs)
+        # decode writes at positions plen .. plen+max_new-2; past cache_len
+        # dynamic_update_slice would clamp and silently corrupt the arena
+        assert plen + max_new - 1 <= self.cache_len, (
+            f"prompt ({plen}) + max_new_tokens ({max_new}) overflow the "
+            f"cache ({self.cache_len})")
         prompts = np.zeros((b, plen), np.int32)
         for i, r in enumerate(reqs):
             prompts[i, :len(r.prompt)] = r.prompt  # noqa: E203
 
+        # per-request temperatures: slot i samples at reqs[i].temperature
+        # (empty slots run greedy); each wave advances the engine's PRNG.
+        temps = np.zeros((b,), np.float32)
+        for i, r in enumerate(reqs):
+            temps[i] = r.temperature
+        temps = jnp.asarray(temps)
+
         t0 = time.perf_counter()
         batch = {"tokens": jnp.asarray(prompts), **self.extras}
         cache, logits = self.api.prefill(self.params, batch, self.cache_len)
-        first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self._key, sub = jax.random.split(self._key)
+        first = np.asarray(sample_batched(
+            logits[:, -1], temps, jax.random.split(sub, b)))
         t_prefill = time.perf_counter() - t0
 
-        max_new = max(r.max_new_tokens for r in reqs)
         out = np.zeros((b, max_new), np.int32)
         out[:, 0] = first
         cur = jnp.asarray(first[:, None])
-        key = jax.random.PRNGKey(0)
-        temperature = reqs[0].temperature
 
         t1 = time.perf_counter()
         for step in range(1, max_new):
             pos = jnp.int32(plen + step - 1)
-            key, sub = jax.random.split(key)
-            cache, nxt = self._decode(self.params, cache, cur, pos, sub, temperature)
+            self._key, sub = jax.random.split(self._key)
+            keys = jax.random.split(sub, b)
+            cache, nxt = self._decode(self.params, cache, cur, pos, keys, temps)
             out[:, step] = np.asarray(nxt)
             cur = nxt[:, None]
         jax.block_until_ready(cur)
         t_decode = time.perf_counter() - t1
 
         return [
-            Completion(uid=r.uid, tokens=out[i, :r.max_new_tokens],
+            Completion(uid=r.uid,
+                       tokens=_truncate_eos(out[i, :r.max_new_tokens],
+                                            r.eos_token),
                        prefill_s=t_prefill, decode_s=t_decode)
             for i, r in enumerate(reqs)
         ]
 
     def serve(self, requests: Sequence[Request]) -> List[Completion]:
-        """Serve an arbitrary number of requests in waves."""
+        """Serve an arbitrary number of requests in waves.
+
+        ``finished_s`` on each completion is the wall time from serve() start
+        to the end of the request's wave — every request in a wave waits for
+        the wave's longest request."""
         done: List[Completion] = []
+        t0 = time.perf_counter()
         for i in range(0, len(requests), self.batch_slots):
-            done.extend(self.run_wave(requests[i:i + self.batch_slots]))
+            wave = self.run_wave(requests[i:i + self.batch_slots])
+            t_wave = time.perf_counter() - t0
+            for c in wave:
+                c.finished_s = t_wave
+            done.extend(wave)
         return done

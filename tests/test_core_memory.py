@@ -1,14 +1,14 @@
 """Static memory planner (dataMem) invariants — unit + property tests."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core import Graph, Node, chain, layers as L, memory, sequential
 from repro.core.graph import GraphError
+
+from _hyp import given, settings, st  # hypothesis or fallback shim
 
 
 def mlp_graph(sizes):

@@ -1,12 +1,12 @@
 """Pruning + operation skipping (§6.2)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
 
 from repro.core import prune
+
+from _hyp import given, settings, st  # hypothesis or fallback shim
 
 
 class TestMagnitudePrune:

@@ -1,12 +1,12 @@
 """Quantization (§6.1): Table 2 byte-exact, op counts, error bounds."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
 
 from repro.core import layers as L, quantize, sequential
+
+from _hyp import given, settings, st  # hypothesis or fallback shim
 
 
 class TestTable2:

@@ -1,12 +1,12 @@
 """Multipart inference + scan-cycle runtime (§6.3, §7.2)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
 
 from repro.core import layers as L, runtime, sequential
+
+from _hyp import given, settings, st  # hypothesis or fallback shim
 
 
 def make_model(sizes=(64, 64, 64, 10), in_dim=32, key=0):

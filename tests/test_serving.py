@@ -55,6 +55,37 @@ class TestEngine:
         np.testing.assert_array_equal(got, np.asarray(want))
 
 
+class TestPerRequestSampling:
+    def test_mixed_temperatures_in_one_wave(self, dense_setup):
+        """Regression: temperature used to be read from reqs[0] only, so a
+        greedy and a sampled request in one wave both decoded greedily."""
+        cfg, api, params = dense_setup
+        eng = Engine(api, params, batch_slots=2, cache_len=64, seed=0)
+        prompt = np.arange(5, dtype=np.int32)
+        done = eng.serve([
+            Request(uid=0, prompt=prompt, max_new_tokens=8, temperature=0.0),
+            Request(uid=1, prompt=prompt, max_new_tokens=8, temperature=5.0),
+        ])
+        got = {c.uid: c.tokens for c in done}
+        # greedy slot is unaffected by its sampled neighbour...
+        want = Engine(api, params, batch_slots=1, cache_len=64).serve(
+            [Request(uid=0, prompt=prompt, max_new_tokens=8)])[0].tokens
+        np.testing.assert_array_equal(got[0], want)
+        # ...and the hot slot actually sampled (identical prompts diverge)
+        assert not np.array_equal(got[1], got[0])
+
+    def test_waves_use_fresh_prng(self, dense_setup):
+        """Regression: the PRNG key was hardcoded per wave, so repeated waves
+        replayed identical samples."""
+        cfg, api, params = dense_setup
+        eng = Engine(api, params, batch_slots=1, cache_len=64, seed=0)
+        r = Request(uid=0, prompt=np.arange(5, dtype=np.int32),
+                    max_new_tokens=16, temperature=5.0)
+        a = eng.serve([r])[0].tokens
+        b = eng.serve([r])[0].tokens
+        assert not np.array_equal(a, b)
+
+
 class TestCyclicDecoder:
     @pytest.mark.parametrize("n_segments", [1, 2])
     def test_multipart_decode_matches_plain(self, dense_setup, n_segments):
