@@ -1,0 +1,143 @@
+"""Fleet detection serving: batched StreamEngine vs naive per-stream loop.
+
+Workload: a >=16-plant fleet of mixed scenarios streaming at the scan cycle.
+Both paths see the identical pre-generated reading matrix (simulation cost is
+excluded); we report windows/s and p99 verdict latency for
+
+  * the naive baseline: one float ``model.apply`` jit call per ready stream,
+    per-stream np.roll ring maintenance (the §7 single-plant idiom applied
+    per plant),
+  * the batched StreamEngine under REAL and SINT/INT/DINT (§6.1) — one
+    jitted donated step for all ready windows, int8 via the qmatmul path.
+
+Run:  PYTHONPATH=src python benchmarks/detection_bench.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import msf_detector as spec
+from repro.core import quantize
+from repro.serving import StreamEngine
+from repro.sim import build_detector, build_fleet
+
+Row = dict
+
+
+def generate_readings(n_streams: int, n_cycles: int, seed: int) -> np.ndarray:
+    """(C, S, F) raw sensor readings from a mixed-scenario fleet."""
+    fleet = build_fleet(n_plants=n_streams, seed=seed)
+    out = np.zeros((n_cycles, n_streams, spec.N_FEATURES), np.float32)
+    for c in range(n_cycles):
+        for i, s in enumerate(fleet):
+            r = s.step()
+            out[c, i] = (r.tb0_meas, r.wd_meas)
+    return out
+
+
+def run_engine(model, params, readings, *, stride: int) -> tuple:
+    n_cycles, n_streams, _ = readings.shape
+    eng = StreamEngine(model, params, n_streams=n_streams, stride=stride)
+    eng.warmup()
+    t0 = time.perf_counter()
+    for c in range(n_cycles):
+        eng.ingest(readings[c])
+    wall = time.perf_counter() - t0
+    return eng.stats.windows, wall, eng.stats.latency_p(99)
+
+
+def run_naive(model, params, readings, *, stride: int) -> tuple:
+    """Per-stream float loop: np.roll ring + one jit apply per ready stream."""
+    n_cycles, n_streams, n_feat = readings.shape
+    window = spec.WINDOW
+    apply1 = jax.jit(model.apply)
+    mean = np.asarray(spec.NORM_MEAN, np.float32)
+    std = np.asarray(spec.NORM_STD, np.float32)
+    # warmup compile outside the timed region (same courtesy as the engine)
+    jax.block_until_ready(apply1(params, jnp.zeros((window * n_feat,))))
+    rings = np.zeros((n_streams, window, n_feat), np.float32)
+    windows = 0
+    latencies = []
+    t0 = time.perf_counter()
+    for c in range(n_cycles):
+        tc = time.perf_counter()
+        norm = (readings[c] - mean) / std
+        rings = np.roll(rings, -1, axis=1)
+        rings[:, -1, :] = norm
+        count = c + 1
+        if count >= window and (count - window) % stride == 0:
+            outs = []
+            for i in range(n_streams):
+                outs.append(apply1(params, jnp.asarray(rings[i].reshape(-1))))
+            for o in outs:
+                jax.block_until_ready(o)
+            windows += n_streams
+            latencies.append(time.perf_counter() - tc)
+    wall = time.perf_counter() - t0
+    p99 = float(np.percentile(latencies, 99)) if latencies else 0.0
+    return windows, wall, p99
+
+
+def main(quick: bool = False, n_streams: int = 16, n_cycles: int = 0):
+    n_cycles = n_cycles or (400 if quick else 1200)
+    stride = spec.STRIDE
+
+    print(f"# fleet: {n_streams} plants, {n_cycles} cycles, "
+          f"window={spec.WINDOW}, stride={stride}")
+    readings = generate_readings(n_streams, n_cycles, seed=0)
+
+    model = build_detector()
+    params = model.init_params(jax.random.PRNGKey(0))
+    calib = [jnp.asarray(np.random.default_rng(1).normal(size=spec.INPUT_SIZE)
+                         .astype(np.float32)) for _ in range(8)]
+
+    rows = []
+    w_naive, wall_naive, p99_naive = run_naive(model, params, readings,
+                                               stride=stride)
+    wps_naive = w_naive / wall_naive
+    rows.append({"name": "detect_naive_float",
+                 "us_per_call": wall_naive / max(w_naive, 1) * 1e6,
+                 "derived": f"windows_s={wps_naive:.0f};"
+                            f"p99_ms={p99_naive * 1e3:.2f}"})
+
+    variants = [("REAL", params)]
+    for scheme in quantize.SCHEMES:
+        variants.append((scheme, quantize.quantize_params(
+            model, params, scheme, calibration=calib)))
+    speedup_sint = 0.0
+    for scheme, p in variants:
+        w, wall, p99 = run_engine(model, p, readings, stride=stride)
+        wps = w / wall
+        speed = wps / wps_naive
+        if scheme == "SINT":
+            speedup_sint = speed
+        rows.append({"name": f"detect_engine_{scheme.lower()}",
+                     "us_per_call": wall / max(w, 1) * 1e6,
+                     "derived": f"windows_s={wps:.0f};"
+                                f"p99_ms={p99 * 1e3:.2f};"
+                                f"speedup={speed:.2f}x"})
+    emit(rows)
+    print(f"# batched SINT vs naive float: {speedup_sint:.2f}x windows/s")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--streams", type=int, default=16)
+    ap.add_argument("--cycles", type=int, default=0)
+    a = ap.parse_args()
+    main(quick=a.quick, n_streams=a.streams, n_cycles=a.cycles)

@@ -17,6 +17,7 @@ MODULES = [
     ("multipart_bench", "§6.3"),
     ("perf_gap", "§5.4"),
     ("casestudy_bench", "§7"),
+    ("detection_bench", "§7-fleet"),
     ("roofline", "§Roofline"),
 ]
 

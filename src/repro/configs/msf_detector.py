@@ -1,5 +1,7 @@
 """The §7 case-study model: densely connected classifier with 400 inputs
-(2 features x 10 readings/s x 20 s) and 4 hidden ReLU layers."""
+(2 features x 10 readings/s x 20 s) and 4 hidden ReLU layers — plus the
+serving-side constants for the fleet detection service
+(`repro.serving.streams.StreamEngine` / `examples/detect_fleet.py`)."""
 
 INPUT_SIZE = 400
 HIDDEN = (64, 32, 16)
@@ -8,3 +10,19 @@ WINDOW_SECONDS = 20
 READINGS_PER_SECOND = 10
 N_FEATURES = 2
 SCAN_CYCLE_MS = 100
+
+# Sliding-window featurization (shared by build_dataset and StreamEngine):
+# window length in scan cycles and the verdict stride between windows.
+WINDOW = WINDOW_SECONDS * READINGS_PER_SECOND   # 200 readings -> 400 features
+STRIDE = 10
+
+# PLC-side normalization around the nominal operating point — baked into data
+# collection by the paper's porting flow, so serving must apply the identical
+# transform: (reading - NORM_MEAN) / NORM_STD per feature (TB0, Wd).
+NORM_MEAN = (89.6, 19.18)
+NORM_STD = (2.0, 0.5)
+
+# Fleet serving defaults: verdicts must land within one scan cycle of the
+# window completing (the §7 real-time budget), across this many plants.
+DEADLINE_S = SCAN_CYCLE_MS / 1000.0
+FLEET_STREAMS = 16

@@ -59,13 +59,17 @@ def quantized_matmul(
         return ref.qmatmul_ref(xq, wq, scale, bias)
     m, k = xq.shape
     n = wq.shape[1]
-    xp = _pad_to(_pad_to(xq, 0, block), 1, block)
+    # Small-M batches (e.g. the detection service's ready-stream windows, M =
+    # fleet size) pad to a 32-row granule — the int8 MXU minimum tile — not to
+    # a full 128 block, so a 16-stream step doesn't do 8x the row work.
+    block_m = min(block, max(32, -(-m // 32) * 32))
+    xp = _pad_to(_pad_to(xq, 0, block_m), 1, block)
     wp = _pad_to(_pad_to(wq, 0, block), 1, block)
     scale_p = _pad_to(jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (n,)), 0, block)
     bias_p = None if bias is None else _pad_to(bias, 0, block)
     out = _qmatmul_pallas(
         xp, wp, scale_p, bias_p,
-        block_m=min(block, xp.shape[0]),
+        block_m=block_m,
         block_n=block,
         block_k=block,
         interpret=not _on_tpu(),

@@ -1,6 +1,7 @@
 from repro.serving.continuous import ContinuousEngine, ServeStats
 from repro.serving.cyclic import CyclicDecoder
 from repro.serving.engine import Completion, Engine, Request
+from repro.serving.streams import StreamEngine, StreamStats, Verdict
 
 __all__ = ["ContinuousEngine", "CyclicDecoder", "Completion", "Engine",
-           "Request", "ServeStats"]
+           "Request", "ServeStats", "StreamEngine", "StreamStats", "Verdict"]

@@ -1,0 +1,281 @@
+"""Fleet-scale streaming anomaly detection: many plants, one detector step.
+
+The §7 case study runs the 400-64-32-16-2 detector on *one* plant, offline,
+in float.  :class:`StreamEngine` serves a **fleet**: it ingests one sensor
+reading per plant per scan cycle, maintains a per-stream ring-buffer sliding
+window (the paper's 2 features x 10 Hz x 20 s = 400-input window), and when
+windows complete it batches **all ready streams into one jitted, donated
+detector step** — ring-buffer scatter write, modular window unroll, and the
+batched MLP forward fused into a single XLA computation, with the ring arena
+donated across steps (the ICSML dataMem discipline).
+
+Quantized serving (§6.1) runs the same step with SINT/INT/DINT params from
+``repro.core.quantize``: SINT (int8) layers go through the Pallas
+``qmatmul`` int8 MXU path via ``repro.kernels.ops.quantized_matmul``
+(oracle math on CPU, kernel on TPU); INT/DINT layers use the f32-emulated
+integer arithmetic, exactly like ``layers._quantized_matvec``.
+
+Between verdict cycles the engine touches no device state at all: readings
+accumulate host-side and are scattered into the ring inside the next detector
+step, so a stride-10 fleet pays one dispatch per verdict cadence rather than
+one per scan cycle.  Per-window latency/deadline accounting follows the
+``ServeStats`` conventions of ``serving/continuous.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import msf_detector as spec
+from repro.core.layers import ACTIVATIONS, Dense
+from repro.core.model import Model, ParamTree
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class Verdict:
+    """One per-stream classification of a completed window."""
+
+    stream: int               # stream index in the fleet
+    cycle: int                # scan cycle at which the window completed
+    pred: int                 # argmax class (0 = normal)
+    prob: float               # softmax probability of the predicted class
+    latency_s: float          # window-completion -> verdict-on-host wall time
+    deadline_miss: bool       # latency_s > deadline_s
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Aggregate serve accounting (ServeStats conventions)."""
+
+    steps: int                       # jitted detector steps executed
+    cycles: int                      # scan cycles ingested
+    windows: int                     # verdicts emitted (streams x steps)
+    deadline_misses: int
+    wall_s: float                    # total time spent inside ingest()
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+
+    def latency_p(self, q: float) -> float:
+        return float(np.percentile(self.latencies_s, q)) if self.latencies_s \
+            else 0.0
+
+    def windows_per_s(self) -> float:
+        return self.windows / self.wall_s if self.wall_s > 0 else 0.0
+
+
+def _layer_stack(model: Model, params: ParamTree) -> List[Tuple[Dict, str]]:
+    """(params, activation) per Dense node in schedule order."""
+    stack = []
+    for node in model.graph.nodes:
+        if isinstance(node.layer, Dense):
+            stack.append((params[node.uid], node.layer.activation))
+    if not stack:
+        raise ValueError("model has no Dense layers to serve")
+    return stack
+
+
+def _dense_batched(x: jax.Array, p: Dict, act: str, backend: str) -> jax.Array:
+    """One Dense layer over a (M, K) batch, float or quantized (§6.1)."""
+    if "qw" in p:
+        qw = p["qw"]
+        info = jnp.iinfo(qw.dtype)
+        xq = jnp.clip(jnp.round(x / p["x_scale"]), info.min, info.max)
+        xq = xq.astype(qw.dtype)
+        scale = p["x_scale"] * p["w_scale"]
+        if qw.dtype == jnp.int8:
+            # SINT: native int8 dot product — the Pallas qmatmul MXU path.
+            y = ops.quantized_matmul(xq, qw, scale, p.get("b"), backend=backend)
+        else:
+            # INT/DINT: int16/int32 products overflow int32 accumulation on
+            # TPU, so the integer arithmetic is emulated in f32 (storage
+            # compression is what these schemes buy — see layers.py).
+            y = xq.astype(jnp.float32) @ qw.astype(jnp.float32) * scale
+            if p.get("b") is not None:
+                y = y + p["b"]
+    else:
+        y = x @ p["w"]
+        if "b" in p:
+            y = y + p["b"]
+    return ACTIVATIONS[act](y)
+
+
+class StreamEngine:
+    """Batched sliding-window detector service over ``n_streams`` plants.
+
+    Per scan cycle, call :meth:`ingest` with one ``(n_streams, n_features)``
+    reading block.  The first verdict batch fires once every stream has seen
+    ``window`` readings, then every ``stride`` cycles.  All device work —
+    scattering the pending readings into the per-stream ring buffers,
+    unrolling the windows oldest-first, and the batched (quantized) MLP —
+    happens in one jitted step with the ring donated.
+
+    ``backend`` is forwarded to the int8 qmatmul path: 'auto' (Pallas on TPU,
+    oracle math on CPU), 'pallas' (interpret mode off-TPU), or 'ref'.
+    """
+
+    def __init__(self, model: Model, params: ParamTree, *,
+                 n_streams: int,
+                 n_features: int = spec.N_FEATURES,
+                 window: Optional[int] = None,
+                 stride: int = spec.STRIDE,
+                 deadline_s: float = spec.DEADLINE_S,
+                 norm_mean: Sequence[float] = spec.NORM_MEAN,
+                 norm_std: Sequence[float] = spec.NORM_STD,
+                 backend: str = "auto"):
+        (input_size,) = model.input_shape
+        if window is None:
+            window = input_size // n_features
+        if window * n_features != input_size:
+            raise ValueError(
+                f"window {window} x features {n_features} != model input "
+                f"{input_size}")
+        if not 1 <= stride:
+            raise ValueError("stride must be >= 1")
+        self.model = model
+        self.n_streams = n_streams
+        self.n_features = n_features
+        self.window = window
+        self.stride = stride
+        self.deadline_s = deadline_s
+        self._mean = np.asarray(norm_mean, np.float32)
+        self._std = np.asarray(norm_std, np.float32)
+        if self._mean.shape != (n_features,) or self._std.shape != (n_features,):
+            raise ValueError("norm_mean/norm_std must have one entry per feature")
+        self._stack = _layer_stack(model, params)
+        self._backend = backend
+
+        w = window
+
+        def _forward(win: jax.Array) -> jax.Array:
+            x = win
+            for p, act in self._stack:
+                x = _dense_batched(x, p, act, backend)
+            return x
+
+        def _step(ring, block, pos):
+            # block: (S, L, F) pending readings; L static per compile (the
+            # warmup block is `window` long, steady-state blocks `stride`).
+            # When L > window (stride > window: verdicts sampled less often
+            # than the ring fills) only the last `window` readings can land —
+            # trim before scattering so the indices are provably unique
+            # (duplicate-index scatter-set order is undefined off-CPU).
+            length = block.shape[1]
+            offset = max(length - w, 0)
+            idx = (pos + offset + jnp.arange(length - offset)) % w
+            ring = ring.at[:, idx, :].set(block[:, offset:])
+            # window unroll, oldest reading first: the ring holds exactly the
+            # last `window` readings, ending at (pos + L - 1) mod window.
+            end = (pos + length) % w
+            widx = (end + jnp.arange(w)) % w
+            win = jnp.take(ring, widx, axis=1).reshape(ring.shape[0], -1)
+            return ring, _forward(win)
+
+        self._step = jax.jit(_step, donate_argnums=0)
+
+        self._ring = jnp.zeros((n_streams, window, n_features), jnp.float32)
+        self._pos = 0                 # next ring write index (host-tracked)
+        self._count = 0               # scan cycles ingested
+        self._pending: List[np.ndarray] = []
+        self.last_logits: Optional[np.ndarray] = None
+        self.stats = StreamStats(steps=0, cycles=0, windows=0,
+                                 deadline_misses=0, wall_s=0.0)
+
+    def warmup(self) -> None:
+        """Compile both detector-step shapes (the warmup block is one full
+        window long, steady-state blocks are ``stride`` long) outside the
+        serve clock, so deadline accounting measures serving, not XLA."""
+        for length in sorted({self.window, self.stride}):
+            ring = jnp.zeros_like(self._ring)
+            block = jnp.zeros((self.n_streams, length, self.n_features),
+                              jnp.float32)
+            _, logits = self._step(ring, block, jnp.int32(0))
+            jax.block_until_ready(logits)
+
+    # -- ingestion ---------------------------------------------------------
+
+    def _ready(self) -> bool:
+        return (self._count >= self.window
+                and (self._count - self.window) % self.stride == 0)
+
+    def ingest(self, readings: np.ndarray) -> List[Verdict]:
+        """One scan cycle of fleet readings -> verdicts (usually empty).
+
+        ``readings`` is ``(n_streams, n_features)`` raw sensor values; the
+        engine applies the PLC-side normalization itself.
+        """
+        t0 = time.perf_counter()
+        readings = np.asarray(readings, np.float32)
+        if readings.shape != (self.n_streams, self.n_features):
+            raise ValueError(
+                f"expected ({self.n_streams}, {self.n_features}) readings, "
+                f"got {readings.shape}")
+        self._pending.append((readings - self._mean) / self._std)
+        self._count += 1
+        self.stats.cycles += 1
+
+        verdicts: List[Verdict] = []
+        if self._ready():
+            block = np.stack(self._pending, axis=1)        # (S, L, F)
+            self._pending.clear()
+            self._ring, logits = self._step(
+                self._ring, jnp.asarray(block), jnp.int32(self._pos))
+            self._pos = (self._pos + block.shape[1]) % self.window
+            logits = np.asarray(jax.block_until_ready(logits))
+            self.last_logits = logits
+            latency = time.perf_counter() - t0
+            miss = latency > self.deadline_s
+            probs = _softmax_np(logits)
+            cycle = self._count - 1
+            for i in range(self.n_streams):
+                pred = int(logits[i].argmax())
+                verdicts.append(Verdict(
+                    stream=i, cycle=cycle, pred=pred,
+                    prob=float(probs[i, pred]), latency_s=latency,
+                    deadline_miss=miss))
+            self.stats.steps += 1
+            self.stats.windows += self.n_streams
+            self.stats.deadline_misses += int(miss) * self.n_streams
+            self.stats.latencies_s.append(latency)
+
+        self.stats.wall_s += time.perf_counter() - t0
+        return verdicts
+
+    def run(self, streams: Sequence[Any], n_cycles: int,
+            on_verdict: Optional[Callable[[Verdict], None]] = None,
+            ) -> List[Verdict]:
+        """Drive a fleet of ``PlantStream``-likes for ``n_cycles`` cycles.
+
+        Each stream's ``step()`` must yield an object with ``tb0_meas`` /
+        ``wd_meas`` attributes (simulation cost is *not* counted into the
+        engine's serve stats — only ingest time is).
+        """
+        if len(streams) != self.n_streams:
+            raise ValueError(
+                f"fleet size {len(streams)} != engine streams {self.n_streams}")
+        if self.n_features != 2:
+            raise ValueError("run() reads the MSF (tb0_meas, wd_meas) layout; "
+                             "use ingest() directly for other feature sets")
+        out: List[Verdict] = []
+        readings = np.zeros((self.n_streams, self.n_features), np.float32)
+        for _ in range(n_cycles):
+            for i, s in enumerate(streams):
+                r = s.step()
+                readings[i, 0] = r.tb0_meas
+                readings[i, 1] = r.wd_meas
+            for v in self.ingest(readings):
+                out.append(v)
+                if on_verdict is not None:
+                    on_verdict(v)
+        return out
+
+
+def _softmax_np(logits: np.ndarray) -> np.ndarray:
+    z = logits - logits.max(axis=-1, keepdims=True)
+    e = np.exp(z)
+    return e / e.sum(axis=-1, keepdims=True)

@@ -17,9 +17,11 @@ TB0 setpoint; inner loop drives Ws to track TB0.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.configs import msf_detector as spec
 
 SCAN_DT = 0.1  # 100 ms scan cycle (§7)
 
@@ -37,6 +39,26 @@ class PlantParams:
     noise_tb0: float = 0.002     # process noise std
     noise_wd: float = 0.0005
     wd_setpoint: float = 19.18   # tons/min (paper's §7.2 mean)
+
+
+def jitter_params(base: PlantParams, rel: float,
+                  rng: np.random.Generator) -> PlantParams:
+    """Perturb the plant's *physical* constants by a relative uniform jitter
+    (never the Wd setpoint, which the operator fixes fleet-wide)."""
+    if rel <= 0.0:
+        return dataclasses.replace(base)
+
+    def j(v: float) -> float:
+        return float(v * (1.0 + rng.uniform(-rel, rel)))
+
+    return dataclasses.replace(
+        base,
+        tau_tb=j(base.tau_tb),
+        k_steam=j(base.k_steam),
+        k_flash=j(base.k_flash),
+        noise_tb0=j(base.noise_tb0),
+        noise_wd=j(base.noise_wd),
+    )
 
 
 @dataclasses.dataclass
@@ -99,35 +121,72 @@ def adc(value: float, lo: float, hi: float, bits: int = 12) -> float:
 
 AttackFn = Callable[[int, float], Tuple[float, Dict[str, float], Tuple[float, float]]]
 
+ATTACK_NAMES: Dict[int, str] = {
+    1: "steam_scale", 2: "recycle_cut", 3: "reject_boost", 4: "tb0_fdi",
+    5: "wd_fdi", 6: "oscillate", 7: "ramp",
+}
 
-def make_attacks(rng: np.random.Generator) -> Dict[int, AttackFn]:
-    """Attack id -> function(cycle_in_attack, ws_cmd) -> effects.
-    id 0 is reserved for 'no attack'."""
+
+def make_attack(attack_id: int, intensity: float = 1.0) -> AttackFn:
+    """One attack family, scaled by ``intensity`` (1.0 = the §7 magnitudes).
+
+    Returns function(cycle_in_attack, ws_cmd) -> (ws_eff, params_override,
+    (tb0_bias, wd_bias)).  id 0 is reserved for 'no attack'.
+    """
+    i = intensity
 
     def a1_steam_scale(t, ws):      # actuator: steam valve scaled down
-        return ws * 0.55, {}, (0.0, 0.0)
+        return ws * (1.0 - 0.45 * i), {}, (0.0, 0.0)
 
     def a2_recycle_cut(t, ws):      # actuator: recycle brine reduced
-        return ws, {"recycle": 0.62}, (0.0, 0.0)
+        return ws, {"recycle": 1.0 - 0.38 * i}, (0.0, 0.0)
 
     def a3_reject_boost(t, ws):     # actuator: water rejection increased
-        return ws, {"reject": 6.5}, (0.0, 0.0)
+        return ws, {"reject": 6.5 * i}, (0.0, 0.0)
 
     def a4_tb0_fdi(t, ws):          # sensor FDI: TB0 reads high
-        return ws, {}, (3.5, 0.0)
+        return ws, {}, (3.5 * i, 0.0)
 
     def a5_wd_fdi(t, ws):           # sensor FDI: Wd reads high
-        return ws, {}, (0.0, 0.9)
+        return ws, {}, (0.0, 0.9 * i)
 
     def a6_oscillate(t, ws):        # actuator: oscillatory steam valve
-        return ws * (1.0 + 0.45 * np.sin(2 * np.pi * t / 80.0)), {}, (0.0, 0.0)
+        return ws * (1.0 + 0.45 * i * np.sin(2 * np.pi * t / 80.0)), {}, (0.0, 0.0)
 
     def a7_ramp(t, ws):             # stealthy ramp on recycle efficiency
         frac = min(t / 1200.0, 1.0)
-        return ws, {"recycle": 1.0 - 0.35 * frac}, (0.0, 0.0)
+        return ws, {"recycle": 1.0 - 0.35 * i * frac}, (0.0, 0.0)
 
-    return {1: a1_steam_scale, 2: a2_recycle_cut, 3: a3_reject_boost,
-            4: a4_tb0_fdi, 5: a5_wd_fdi, 6: a6_oscillate, 7: a7_ramp}
+    fns = {1: a1_steam_scale, 2: a2_recycle_cut, 3: a3_reject_boost,
+           4: a4_tb0_fdi, 5: a5_wd_fdi, 6: a6_oscillate, 7: a7_ramp}
+    if attack_id not in fns:
+        raise ValueError(f"unknown attack id {attack_id}; pick from 1..7")
+    return fns[attack_id]
+
+
+def make_attacks(rng: Optional[np.random.Generator] = None,
+                 intensity: float = 1.0) -> Dict[int, AttackFn]:
+    """Attack id -> AttackFn for all seven families (§7 magnitudes)."""
+    return {k: make_attack(k, intensity) for k in ATTACK_NAMES}
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackEvent:
+    """One scheduled attack: family x onset x duration x intensity.
+
+    ``duration=None`` means the attack persists to the end of the run.  The
+    per-cycle attack clock (what ``AttackFn`` sees) restarts at ``start``.
+    """
+
+    attack_id: int
+    start: int
+    duration: Optional[int] = None
+    intensity: float = 1.0
+
+    def active(self, cycle: int) -> bool:
+        if cycle < self.start:
+            return False
+        return self.duration is None or cycle < self.start + self.duration
 
 
 # ---------------------------------------------------------------------------
@@ -170,6 +229,79 @@ class SimTrace:
     label: np.ndarray        # 0 normal, k = attack id
 
 
+@dataclasses.dataclass
+class CycleReading:
+    """One scan cycle's observables from a :class:`PlantStream`."""
+
+    tb0_meas: float
+    wd_meas: float
+    tb0_true: float
+    wd_true: float
+    ws_cmd: float
+    label: int               # 0 normal, k = attack id active this cycle
+
+
+class PlantStream:
+    """One plant + cascading PID + attack schedule, stepped one scan cycle at
+    a time — the streaming core behind both :func:`simulate` (offline traces)
+    and the fleet serving path (`repro.serving.streams.StreamEngine`).
+
+    ``events`` is a sequence of :class:`AttackEvent`; when several are active
+    at once the earliest-listed one wins (no superposition — one adversary at
+    the controls at a time).
+    """
+
+    def __init__(self, params: Optional[PlantParams] = None, *,
+                 events: Sequence[AttackEvent] = (), seed: int = 0,
+                 name: str = ""):
+        self.params = params or PlantParams()
+        self.plant = MSFPlant(self.params, seed=seed)
+        self.pid = CascadePID()
+        self.events = tuple(events)
+        self._fns = [make_attack(e.attack_id, e.intensity) for e in self.events]
+        self.name = name
+        self.cycle = 0
+        # settle readings at the operating point before the loop
+        self.tb0_true = self.params.tb0_init
+        self.wd_true = self.params.wd_setpoint
+
+    def _active(self, cycle: int) -> Tuple[Optional[AttackEvent], Optional[AttackFn]]:
+        for e, fn in zip(self.events, self._fns):
+            if e.active(cycle):
+                return e, fn
+        return None, None
+
+    def step(self) -> CycleReading:
+        """Advance one scan cycle: sense -> control -> actuate."""
+        cycle = self.cycle
+        event, fn = self._active(cycle)
+
+        # -- sense (through the ADC, with FDI biases if attacked)
+        bias_tb0, bias_wd = 0.0, 0.0
+        if event is not None:
+            _, _, (bias_tb0, bias_wd) = fn(cycle - event.start, 0.0)
+        tb0_meas = adc(self.tb0_true + bias_tb0, 40.0, 120.0)
+        wd_meas = adc(self.wd_true + bias_wd, 0.0, 40.0)
+
+        # -- control (the PLC's primary task)
+        ws = self.pid.step(wd_meas, tb0_meas, self.params.wd_setpoint)
+
+        # -- actuate (attack may tamper with actuators / plant params)
+        overrides: Dict[str, float] = {}
+        ws_eff = ws
+        if event is not None:
+            ws_eff, overrides, _ = fn(cycle - event.start, ws)
+        self.plant.apply_overrides(overrides)
+        self.tb0_true, self.wd_true = self.plant.step(ws_eff)
+
+        self.cycle += 1
+        return CycleReading(
+            tb0_meas=tb0_meas, wd_meas=wd_meas,
+            tb0_true=self.tb0_true, wd_true=self.wd_true,
+            ws_cmd=ws, label=event.attack_id if event is not None else 0,
+        )
+
+
 def simulate(
     n_cycles: int,
     *,
@@ -177,50 +309,35 @@ def simulate(
     attack_start: Optional[int] = None,
     seed: int = 0,
     defense_hook: Optional[Callable[[int, np.ndarray], None]] = None,
+    events: Optional[Sequence[AttackEvent]] = None,
+    params: Optional[PlantParams] = None,
 ) -> SimTrace:
-    """Run the closed loop for n_cycles; optionally inject one attack."""
-    plant = MSFPlant(PlantParams(), seed=seed)
-    pid = CascadePID()
-    attacks = make_attacks(np.random.default_rng(seed + 1))
-    sp = plant.base.wd_setpoint
+    """Run the closed loop for n_cycles; optionally inject attacks.
 
-    # settle readings at the operating point before the loop
-    tb0_true, wd_true = plant.base.tb0_init, sp
+    ``attack_id``/``attack_start`` keep the original single-attack interface;
+    ``events`` takes a full :class:`AttackEvent` schedule (mutually exclusive
+    with the former).
+    """
+    if events is None:
+        events = ([AttackEvent(attack_id, attack_start)]
+                  if attack_id != 0 and attack_start is not None else [])
+    elif attack_id != 0 or attack_start is not None:
+        raise ValueError("pass either attack_id/attack_start or events, not both")
+    stream = PlantStream(params, events=events, seed=seed)
 
     out = {k: np.zeros(n_cycles) for k in
            ("tb0_meas", "wd_meas", "tb0_true", "wd_true", "ws_cmd", "label")}
 
     for cycle in range(n_cycles):
-        under_attack = (
-            attack_id != 0 and attack_start is not None and cycle >= attack_start
-        )
-        # -- sense (through the ADC, with FDI biases if attacked)
-        bias_tb0, bias_wd = 0.0, 0.0
-        if under_attack:
-            _, _, (bias_tb0, bias_wd) = attacks[attack_id](cycle - attack_start, 0.0)
-        tb0_meas = adc(tb0_true + bias_tb0, 40.0, 120.0)
-        wd_meas = adc(wd_true + bias_wd, 0.0, 40.0)
-
-        # -- control (the PLC's primary task)
-        ws = pid.step(wd_meas, tb0_meas, sp)
-
-        # -- actuate (attack may tamper with actuators / plant params)
-        overrides: Dict[str, float] = {}
-        ws_eff = ws
-        if under_attack:
-            ws_eff, overrides, _ = attacks[attack_id](cycle - attack_start, ws)
-        plant.apply_overrides(overrides)
-        tb0_true, wd_true = plant.step(ws_eff)
-
+        r = stream.step()
         if defense_hook is not None:
-            defense_hook(cycle, np.array([tb0_meas, wd_meas], np.float32))
-
-        out["tb0_meas"][cycle] = tb0_meas
-        out["wd_meas"][cycle] = wd_meas
-        out["tb0_true"][cycle] = tb0_true
-        out["wd_true"][cycle] = wd_true
-        out["ws_cmd"][cycle] = ws
-        out["label"][cycle] = attack_id if under_attack else 0
+            defense_hook(cycle, np.array([r.tb0_meas, r.wd_meas], np.float32))
+        out["tb0_meas"][cycle] = r.tb0_meas
+        out["wd_meas"][cycle] = r.wd_meas
+        out["tb0_true"][cycle] = r.tb0_true
+        out["wd_true"][cycle] = r.wd_true
+        out["ws_cmd"][cycle] = r.ws_cmd
+        out["label"][cycle] = r.label
 
     return SimTrace(**{k: v for k, v in out.items()})
 
@@ -238,12 +355,17 @@ def build_dataset(
     attack_cycles: int = 5_700,
     seed: int = 0,
     attack_param_scale: float = 1.0,
+    jitter: float = 0.0,
+    jitter_plants: int = 0,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Windows of (TB0, Wd) readings -> binary labels (attack in window tail).
 
     Defaults approximate the paper's 22h45m dataset proportions scaled down;
     `attack_param_scale` perturbs attack magnitudes so evaluation can use
-    parameters unseen in training (§7.1).
+    parameters unseen in training (§7.1).  ``jitter``/``jitter_plants`` add
+    normal traces from physically-jittered plants so a fleet-serving detector
+    (heterogeneous plants, see ``repro.sim.scenarios``) learns that per-plant
+    operating-point spread is benign.
     """
     xs: List[np.ndarray] = []
     ys: List[int] = []
@@ -252,8 +374,8 @@ def build_dataset(
         feats = np.stack([trace.tb0_meas, trace.wd_meas], axis=1).astype(np.float32)
         # standardize around the nominal operating point (the PLC-side
         # normalization the paper's porting flow bakes into data collection)
-        feats[:, 0] = (feats[:, 0] - 89.6) / 2.0
-        feats[:, 1] = (feats[:, 1] - 19.18) / 0.5
+        feats -= np.asarray(spec.NORM_MEAN, np.float32)
+        feats /= np.asarray(spec.NORM_STD, np.float32)
         for start in range(0, len(feats) - window, stride):
             w = feats[start:start + window]
             lab = trace.label[start:start + window]
@@ -261,6 +383,12 @@ def build_dataset(
             ys.append(int(lab[-window // 4:].max() > 0))
 
     add_windows(simulate(normal_cycles, seed=seed))
+    if jitter > 0.0 and jitter_plants > 0:
+        per_plant = max(normal_cycles // jitter_plants, window + stride)
+        for j in range(jitter_plants):
+            p = jitter_params(PlantParams(), jitter,
+                              np.random.default_rng(seed + 600 + j))
+            add_windows(simulate(per_plant, seed=seed + 300 + j, params=p))
     for attack_id in range(1, 8):
         tr = simulate(attack_cycles, attack_id=attack_id,
                       attack_start=attack_cycles // 5, seed=seed + 10 + attack_id)

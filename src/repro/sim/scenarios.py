@@ -1,0 +1,161 @@
+"""Named attack scenarios over the MSF plant — the fleet workload library.
+
+The §7 dataset exercises seven attack families one at a time on one canned
+plant.  Fleet-scale serving needs a *heterogeneous* workload: this module
+composes the families into named scenarios (family x onset x intensity x
+duration, plus multi-attack sequences) and adds per-plant physical-parameter
+jitter, so a fleet of :class:`~repro.sim.msf.PlantStream` instances exercises
+the detector on plants that differ in dynamics, attack timing and magnitude.
+
+Scenario semantics: events are scheduled in absolute scan cycles; when events
+overlap the earliest-listed one wins (one adversary at the controls at a
+time).  Jitter perturbs the plant's *physical* constants (thermal time
+constant, steam/flash gains, noise floors) — never the Wd setpoint, which the
+operator fixes fleet-wide — so normal operation stays near the nominal point
+the detector was calibrated on while transients differ per plant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sim.msf import (ATTACK_NAMES, AttackEvent, PlantParams,
+                           PlantStream, jitter_params)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named, reproducible attack schedule for one plant."""
+
+    name: str
+    description: str
+    events: Tuple[AttackEvent, ...] = ()
+    jitter: float = 0.01          # relative physical-parameter jitter
+
+    @property
+    def families(self) -> Tuple[int, ...]:
+        return tuple(sorted({e.attack_id for e in self.events}))
+
+    @property
+    def composed(self) -> bool:
+        return len(self.events) >= 2
+
+    @property
+    def onset(self) -> Optional[int]:
+        """First attacked cycle (None for a benign scenario)."""
+        return min((e.start for e in self.events), default=None)
+
+
+def _s(name: str, description: str, *events: AttackEvent,
+       jitter: float = 0.01) -> Scenario:
+    return Scenario(name=name, description=description, events=tuple(events),
+                    jitter=jitter)
+
+
+# One scenario per family at §7 magnitudes, plus intensity/duration variants
+# and composed multi-attack sequences.  Onsets leave ≥1 full detector window
+# (200 cycles) of normal operation first.
+_ALL = [
+    _s("baseline", "benign operation, jittered plant"),
+    _s("steam-throttle", "steam valve scaled down (family 1)",
+       AttackEvent(1, start=400)),
+    _s("recycle-starve", "recycle brine flow cut (family 2)",
+       AttackEvent(2, start=400)),
+    _s("reject-flood", "water rejection forced up (family 3)",
+       AttackEvent(3, start=400)),
+    _s("tb0-spoof", "TB0 sensor false-data injection (family 4)",
+       AttackEvent(4, start=400)),
+    _s("wd-spoof", "Wd sensor false-data injection (family 5)",
+       AttackEvent(5, start=400)),
+    _s("valve-flutter", "oscillatory steam valve (family 6)",
+       AttackEvent(6, start=400)),
+    _s("stealth-drift", "slow recycle-efficiency ramp (family 7)",
+       AttackEvent(7, start=300)),
+    _s("steam-pulse", "short, hard steam throttle burst",
+       AttackEvent(1, start=400, duration=200, intensity=1.5)),
+    _s("gentle-starve", "low-intensity recycle cut (stealthier family 2)",
+       AttackEvent(2, start=500, intensity=0.5)),
+    _s("spoof-then-starve", "TB0 spoof burst, then a recycle cut",
+       AttackEvent(4, start=300, duration=300),
+       AttackEvent(2, start=800)),
+    _s("flutter-then-throttle", "valve flutter probing, then a throttle",
+       AttackEvent(6, start=300, duration=400, intensity=0.8),
+       AttackEvent(1, start=900)),
+    _s("drift-then-spoof", "stealth ramp handing off to a Wd spoof",
+       AttackEvent(7, start=200, duration=600),
+       AttackEvent(5, start=900)),
+    _s("full-gauntlet", "three families back to back with recovery gaps",
+       AttackEvent(1, start=300, duration=200),
+       AttackEvent(3, start=700, duration=200),
+       AttackEvent(5, start=1100, duration=200)),
+]
+
+SCENARIOS: Dict[str, Scenario] = {s.name: s for s in _ALL}
+assert len(SCENARIOS) == len(_ALL), "duplicate scenario name"
+
+
+def list_scenarios() -> List[str]:
+    return list(SCENARIOS)
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {', '.join(SCENARIOS)}")
+
+
+def register_scenario(scenario: Scenario) -> Scenario:
+    """Add a user-defined scenario to the library (name must be fresh)."""
+    if scenario.name in SCENARIOS:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def build_fleet(
+    names: Optional[Sequence[str]] = None,
+    n_plants: Optional[int] = None,
+    *,
+    seed: int = 0,
+    jitter: Optional[float] = None,
+    base_params: Optional[PlantParams] = None,
+) -> List[PlantStream]:
+    """A fleet of plant streams, scenarios assigned round-robin.
+
+    ``names`` defaults to the full library; ``n_plants`` defaults to one plant
+    per name.  ``jitter`` overrides every scenario's own jitter.  Each plant
+    gets a distinct seed (process noise and jitter draws decorrelate), and its
+    ``name`` records ``{scenario}#{index}`` for verdict attribution.
+    """
+    names = list(names) if names is not None else list(SCENARIOS)
+    if not names:
+        raise ValueError("need at least one scenario name")
+    n_plants = n_plants if n_plants is not None else len(names)
+    base = base_params or PlantParams()
+    fleet: List[PlantStream] = []
+    for i in range(n_plants):
+        sc = get_scenario(names[i % len(names)])
+        rel = sc.jitter if jitter is None else jitter
+        params = jitter_params(base, rel, np.random.default_rng(seed + 7919 * i))
+        fleet.append(PlantStream(params, events=sc.events, seed=seed + i,
+                                 name=f"{sc.name}#{i}"))
+    return fleet
+
+
+def scenario_table() -> str:
+    """Human-readable library summary (used by examples/detect_fleet.py)."""
+    rows = ["name                     families  composed  events"]
+    for s in SCENARIOS.values():
+        fams = ",".join(str(f) for f in s.families) or "-"
+        evs = "; ".join(
+            f"{ATTACK_NAMES[e.attack_id]}@{e.start}"
+            + (f"+{e.duration}" if e.duration is not None else "")
+            + (f" x{e.intensity:g}" if e.intensity != 1.0 else "")
+            for e in s.events) or "(benign)"
+        rows.append(f"{s.name:<24} {fams:<9} {str(s.composed):<9} {evs}")
+    return "\n".join(rows)

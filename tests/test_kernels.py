@@ -53,6 +53,24 @@ class TestQMatmul:
             np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
                                        rtol=1e-5, atol=1e-4)
 
+    @pytest.mark.parametrize("m", [5, 16, 23])
+    @pytest.mark.parametrize("k,n", [(400, 64), (64, 32), (32, 16), (16, 2)])
+    def test_detector_batched_window_shapes(self, m, k, n):
+        """The detection service's real shapes: M = ready streams (not a
+        multiple of block_m), K/N = the 400-64-32-16-2 layer dims."""
+        xq = jax.random.randint(jax.random.PRNGKey(m), (m, k), -127, 127,
+                                jnp.int8)
+        wq = jax.random.randint(jax.random.PRNGKey(n), (k, n), -127, 127,
+                                jnp.int8)
+        scale = jax.random.uniform(jax.random.PRNGKey(2), (n,), jnp.float32,
+                                   1e-3, 1e-2)
+        bias = jax.random.normal(jax.random.PRNGKey(3), (n,))
+        out = ops.quantized_matmul(xq, wq, scale, bias, backend="pallas")
+        want = ref.qmatmul_ref(xq, wq, scale, bias)
+        assert out.shape == (m, n)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
     def test_wrapper_padding(self):
         """ops.quantized_matmul pads ragged shapes to kernel blocks."""
         xq = jax.random.randint(jax.random.PRNGKey(0), (5, 200), -127, 127,

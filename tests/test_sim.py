@@ -1,10 +1,15 @@
-"""MSF plant simulation + detector (§7) — fast variants."""
+"""MSF plant simulation + scenario library + detector (§7) — fast variants."""
+
+import dataclasses
 
 import numpy as np
 import pytest
 
 from repro.sim import build_dataset, simulate
-from repro.sim.msf import adc, make_attacks
+from repro.sim.msf import (ATTACK_NAMES, AttackEvent, PlantParams, PlantStream,
+                           adc, make_attack, make_attacks)
+from repro.sim.scenarios import (SCENARIOS, build_fleet, get_scenario,
+                                 jitter_params, list_scenarios)
 
 
 class TestPlant:
@@ -35,10 +40,13 @@ class TestPlant:
         d_wd = np.abs(attacked.wd_meas[400:] - normal.wd_meas[400:]).max()
         assert max(d_tb0, d_wd) > 0.05, f"attack {attack_id} invisible"
 
-    def test_attack_labels(self):
-        tr = simulate(1000, attack_id=3, attack_start=600, seed=1)
+    @pytest.mark.parametrize("attack_id", list(range(1, 8)))
+    def test_attack_labels_flip_at_start(self, attack_id):
+        """Labels are 0 before the onset and the attack id from it on, for
+        every family."""
+        tr = simulate(1000, attack_id=attack_id, attack_start=600, seed=1)
         assert (tr.label[:600] == 0).all()
-        assert (tr.label[600:] == 3).all()
+        assert (tr.label[600:] == attack_id).all()
 
     def test_defense_hook_called_every_cycle(self):
         seen = []
@@ -52,6 +60,121 @@ class TestPlant:
         np.testing.assert_array_equal(a.wd_meas, b.wd_meas)
 
 
+class TestAttackSchedule:
+    def test_events_equivalent_to_single_attack(self):
+        a = simulate(800, attack_id=3, attack_start=300, seed=1)
+        b = simulate(800, events=[AttackEvent(3, start=300)], seed=1)
+        np.testing.assert_array_equal(a.wd_meas, b.wd_meas)
+        np.testing.assert_array_equal(a.label, b.label)
+
+    def test_event_duration_bounds_labels(self):
+        tr = simulate(900, events=[AttackEvent(4, start=300, duration=200)],
+                      seed=2)
+        assert (tr.label[:300] == 0).all()
+        assert (tr.label[300:500] == 4).all()
+        assert (tr.label[500:] == 0).all()
+
+    def test_multi_event_sequence_labels(self):
+        tr = simulate(1000, seed=3, events=[
+            AttackEvent(1, start=200, duration=100),
+            AttackEvent(5, start=600, duration=100)])
+        assert (tr.label[200:300] == 1).all()
+        assert (tr.label[300:600] == 0).all()
+        assert (tr.label[600:700] == 5).all()
+
+    def test_earliest_listed_event_wins_overlap(self):
+        tr = simulate(500, seed=4, events=[
+            AttackEvent(2, start=100), AttackEvent(6, start=300)])
+        assert (tr.label[100:] == 2).all()
+
+    def test_intensity_scales_deviation(self):
+        normal = simulate(1200, seed=0)
+        devs = []
+        for intensity in (0.5, 1.5):
+            tr = simulate(1200, seed=0, events=[
+                AttackEvent(1, start=300, intensity=intensity)])
+            devs.append(np.abs(tr.wd_meas[300:] - normal.wd_meas[300:]).max())
+        assert devs[1] > devs[0] * 1.5
+
+    def test_intensity_one_matches_legacy_magnitudes(self):
+        """make_attack(i, 1.0) reproduces the §7 magnitudes of make_attacks."""
+        for aid in range(1, 8):
+            a, b = make_attack(aid, 1.0), make_attacks()[aid]
+            for t in (0, 37, 500):
+                wa, oa, ba = a(t, 5.0)
+                wb, ob, bb = b(t, 5.0)
+                assert (wa, oa, ba) == (wb, ob, bb)
+
+    def test_unknown_attack_id_raises(self):
+        with pytest.raises(ValueError):
+            make_attack(9)
+
+    def test_events_exclusive_with_legacy_interface(self):
+        with pytest.raises(ValueError):
+            simulate(100, attack_id=1, events=[AttackEvent(2, 10)])
+        with pytest.raises(ValueError):
+            simulate(100, attack_start=30, events=[AttackEvent(2, 10)])
+
+    def test_stream_matches_simulate(self):
+        events = [AttackEvent(6, start=100)]
+        stream = PlantStream(events=events, seed=7)
+        got = np.array([stream.step().wd_meas for _ in range(400)])
+        want = simulate(400, events=events, seed=7).wd_meas
+        np.testing.assert_array_equal(got, want)
+
+
+class TestScenarioLibrary:
+    def test_library_size_and_coverage(self):
+        assert len(SCENARIOS) >= 12
+        families = {f for s in SCENARIOS.values() for f in s.families}
+        assert families == set(range(1, 8))
+        assert sum(s.composed for s in SCENARIOS.values()) >= 2
+
+    def test_get_scenario(self):
+        s = get_scenario("stealth-drift")
+        assert s.families == (7,)
+        with pytest.raises(KeyError):
+            get_scenario("nope")
+        assert set(list_scenarios()) == set(SCENARIOS)
+
+    def test_onset(self):
+        assert get_scenario("baseline").onset is None
+        assert get_scenario("spoof-then-starve").onset == 300
+
+    def test_jitter_params(self):
+        rng = np.random.default_rng(0)
+        base = PlantParams()
+        j = jitter_params(base, 0.05, rng)
+        assert j.tau_tb != base.tau_tb
+        assert abs(j.tau_tb / base.tau_tb - 1.0) <= 0.05
+        assert j.wd_setpoint == base.wd_setpoint  # setpoint is operator-fixed
+        same = jitter_params(base, 0.0, rng)
+        assert dataclasses.asdict(same) == dataclasses.asdict(base)
+
+    def test_build_fleet_round_robin_and_seeds(self):
+        fleet = build_fleet(["baseline", "tb0-spoof"], 5, seed=3)
+        assert [p.name for p in fleet] == [
+            "baseline#0", "tb0-spoof#1", "baseline#2", "tb0-spoof#3",
+            "baseline#4"]
+        # distinct seeds + jitter -> distinct trajectories for same scenario
+        a, b = fleet[0], fleet[2]
+        ra = [a.step().wd_meas for _ in range(50)]
+        rb = [b.step().wd_meas for _ in range(50)]
+        assert ra != rb
+
+    def test_fleet_scenarios_runnable(self):
+        """Every library scenario drives a stream without error."""
+        fleet = build_fleet(seed=0)
+        assert len(fleet) == len(SCENARIOS)
+        for p in fleet:
+            for _ in range(5):
+                r = p.step()
+            assert np.isfinite(r.wd_meas)
+
+    def test_attack_names_cover_families(self):
+        assert set(ATTACK_NAMES) == set(range(1, 8))
+
+
 class TestDataset:
     def test_window_shape(self):
         x, y = build_dataset(normal_cycles=1500, attack_cycles=700, stride=50,
@@ -59,6 +182,15 @@ class TestDataset:
         assert x.shape[1] == 400   # 2 x 200 (§7)
         assert set(np.unique(y)) <= {0, 1}
         assert 0.05 < y.mean() < 0.95
+
+    def test_jittered_normal_plants_extend_dataset(self):
+        base = build_dataset(normal_cycles=1500, attack_cycles=700, stride=50,
+                             seed=0)
+        jit = build_dataset(normal_cycles=1500, attack_cycles=700, stride=50,
+                            seed=0, jitter=0.02, jitter_plants=2)
+        assert len(jit[0]) > len(base[0])
+        # the extra windows are all normal-labeled
+        assert jit[1].sum() == base[1].sum()
 
 
 @pytest.mark.slow

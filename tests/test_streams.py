@@ -1,0 +1,246 @@
+"""StreamEngine: ring-buffer windowing, batched verdicts, fleet e2e (§7)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+from repro.core import layers as L
+from repro.core import quantize, sequential
+from repro.serving import StreamEngine
+from repro.sim import build_detector, build_fleet
+
+
+def identity_probe(window: int, n_features: int):
+    """A model whose logits ARE the flattened window: Dense with W=I, b=0.
+
+    Lets tests observe the engine's window contents through the real jitted
+    step (ring write + modular unroll + forward)."""
+    size = window * n_features
+    model = sequential([L.Input(), L.Dense(units=size, activation="linear")],
+                       (size,))
+    params = model.init_params(jax.random.PRNGKey(0))
+    (uid,) = [n.uid for n in model.graph.nodes
+              if isinstance(n.layer, L.Dense)]
+    params[uid]["w"] = jnp.eye(size, dtype=jnp.float32)
+    params[uid]["b"] = jnp.zeros((size,), jnp.float32)
+    return model, params
+
+
+def drive(engine, readings):
+    """Feed (C, S, F) readings; returns [(cycle, logits)] per verdict batch."""
+    out = []
+    for c in range(readings.shape[0]):
+        if engine.ingest(readings[c]):
+            out.append((c, engine.last_logits.copy()))
+    return out
+
+
+class TestWindowing:
+    @settings(max_examples=15, deadline=None)
+    @given(window=st.integers(3, 10), stride=st.integers(1, 5),
+           extra=st.integers(0, 25))
+    def test_windows_equal_naive_slicing(self, window, stride, extra):
+        """For arbitrary lengths/strides the engine's window contents equal
+        naive slicing of the raw stream — including ring wraparound (extra >
+        window wraps the ring several times)."""
+        n_streams, n_features = 3, 2
+        model, params = identity_probe(window, n_features)
+        eng = StreamEngine(model, params, n_streams=n_streams,
+                           n_features=n_features, window=window, stride=stride,
+                           norm_mean=(0.0,) * n_features,
+                           norm_std=(1.0,) * n_features)
+        n_cycles = window + extra
+        rng = np.random.default_rng(window * 100 + stride * 10 + extra)
+        readings = rng.normal(size=(n_cycles, n_streams, n_features)) \
+            .astype(np.float32)
+        batches = drive(eng, readings)
+        expected_batches = (n_cycles - window) // stride + 1
+        assert len(batches) == expected_batches
+        for cycle, logits in batches:
+            want = readings[cycle - window + 1:cycle + 1]      # (W, S, F)
+            want = want.transpose(1, 0, 2).reshape(n_streams, -1)
+            np.testing.assert_allclose(logits, want, rtol=0, atol=0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(window=st.integers(2, 8), stride=st.integers(1, 4))
+    def test_no_verdicts_before_first_window(self, window, stride):
+        model, params = identity_probe(window, 1)
+        eng = StreamEngine(model, params, n_streams=2, n_features=1,
+                           window=window, stride=stride,
+                           norm_mean=(0.0,), norm_std=(1.0,))
+        for c in range(window - 1):
+            assert eng.ingest(np.zeros((2, 1))) == []
+        assert len(eng.ingest(np.zeros((2, 1)))) == 2
+
+    def test_wraparound_regression(self):
+        """Pinned case: stride coprime with window, ring wraps twice."""
+        window, stride = 5, 3
+        model, params = identity_probe(window, 2)
+        eng = StreamEngine(model, params, n_streams=1, n_features=2,
+                           window=window, stride=stride,
+                           norm_mean=(0.0, 0.0), norm_std=(1.0, 1.0))
+        readings = np.arange(13 * 2, dtype=np.float32).reshape(13, 1, 2)
+        batches = drive(eng, readings)
+        assert [c for c, _ in batches] == [4, 7, 10]
+        for cycle, logits in batches:
+            want = readings[cycle - window + 1:cycle + 1, 0].reshape(1, -1)
+            np.testing.assert_array_equal(logits, want)
+
+    def test_stride_longer_than_window(self):
+        """stride > window: only the last `window` readings of each pending
+        block are scattered (unique indices — deterministic off-CPU too)."""
+        window, stride = 3, 5
+        model, params = identity_probe(window, 1)
+        eng = StreamEngine(model, params, n_streams=2, n_features=1,
+                           window=window, stride=stride,
+                           norm_mean=(0.0,), norm_std=(1.0,))
+        readings = np.arange(13 * 2, dtype=np.float32).reshape(13, 2, 1)
+        batches = drive(eng, readings)
+        assert [c for c, _ in batches] == [2, 7, 12]
+        for cycle, logits in batches:
+            want = readings[cycle - window + 1:cycle + 1]
+            want = want.transpose(1, 0, 2).reshape(2, -1)
+            np.testing.assert_array_equal(logits, want)
+
+    def test_normalization_applied(self):
+        model, params = identity_probe(2, 2)
+        eng = StreamEngine(model, params, n_streams=1, n_features=2, window=2,
+                           stride=1, norm_mean=(10.0, 20.0),
+                           norm_std=(2.0, 4.0))
+        eng.ingest(np.array([[12.0, 24.0]]))
+        eng.ingest(np.array([[14.0, 28.0]]))
+        np.testing.assert_allclose(eng.last_logits,
+                                   [[1.0, 1.0, 2.0, 2.0]])
+
+    def test_shape_validation(self):
+        model, params = identity_probe(4, 2)
+        eng = StreamEngine(model, params, n_streams=2, n_features=2, window=4)
+        with pytest.raises(ValueError):
+            eng.ingest(np.zeros((3, 2)))
+        with pytest.raises(ValueError):
+            StreamEngine(model, params, n_streams=2, n_features=2, window=3)
+
+
+class TestDetectorServing:
+    def _windows_from(self, readings, window, mean, std):
+        norm = (readings - mean) / std
+        return norm.transpose(1, 0, 2).reshape(readings.shape[1], -1)
+
+    def test_real_logits_match_model_apply(self):
+        model = build_detector()
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng = StreamEngine(model, params, n_streams=4)
+        fleet = build_fleet(["baseline", "tb0-spoof"], 4, seed=0)
+        eng.run(fleet, 200)
+        fleet2 = build_fleet(["baseline", "tb0-spoof"], 4, seed=0)
+        readings = np.zeros((200, 4, 2), np.float32)
+        for c in range(200):
+            for i, s in enumerate(fleet2):
+                r = s.step()
+                readings[c, i] = (r.tb0_meas, r.wd_meas)
+        win = self._windows_from(readings, 200, np.array(eng._mean),
+                                 np.array(eng._std))
+        want = jax.vmap(model.apply, (None, 0))(params, jnp.asarray(win))
+        np.testing.assert_allclose(eng.last_logits, np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("scheme", ("SINT", "INT", "DINT"))
+    def test_quantized_logits_match_model_apply(self, scheme):
+        """The engine's batched quantized forward equals the per-sample
+        quantized evaluation (layers._quantized_matvec) for every scheme."""
+        model = build_detector()
+        params = model.init_params(jax.random.PRNGKey(1))
+        qp = quantize.quantize_params(model, params, scheme)
+        eng = StreamEngine(model, qp, n_streams=3)
+        fleet = build_fleet(["recycle-starve"], 3, seed=5)
+        eng.run(fleet, 200)
+        fleet2 = build_fleet(["recycle-starve"], 3, seed=5)
+        readings = np.zeros((200, 3, 2), np.float32)
+        for c in range(200):
+            for i, s in enumerate(fleet2):
+                r = s.step()
+                readings[c, i] = (r.tb0_meas, r.wd_meas)
+        win = self._windows_from(readings, 200, np.array(eng._mean),
+                                 np.array(eng._std))
+        want = jax.vmap(model.apply, (None, 0))(qp, jnp.asarray(win))
+        np.testing.assert_allclose(eng.last_logits, np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_pallas_backend_matches_ref(self):
+        model = build_detector()
+        params = model.init_params(jax.random.PRNGKey(2))
+        qp = quantize.quantize_params(model, params, "SINT")
+        logits = {}
+        for backend in ("ref", "pallas"):
+            eng = StreamEngine(model, qp, n_streams=2, backend=backend)
+            eng.run(build_fleet(["wd-spoof"], 2, seed=9), 200)
+            logits[backend] = eng.last_logits
+        np.testing.assert_allclose(logits["pallas"], logits["ref"],
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_stats_accounting(self):
+        model = build_detector()
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng = StreamEngine(model, params, n_streams=4, stride=10)
+        eng.warmup()
+        verdicts = eng.run(build_fleet(["baseline"], 4, seed=0), 230)
+        st_ = eng.stats
+        assert st_.cycles == 230
+        assert st_.steps == 4                    # cycles 200,210,220,230
+        assert st_.windows == 16 == len(verdicts)
+        assert len(st_.latencies_s) == st_.steps
+        assert st_.deadline_misses <= st_.windows
+        assert st_.wall_s > 0 and st_.windows_per_s() > 0
+        assert st_.latency_p(99) >= st_.latency_p(50) > 0
+        streams = {v.stream for v in verdicts}
+        assert streams == {0, 1, 2, 3}
+        for v in verdicts:
+            assert v.pred in (0, 1) and 0.0 <= v.prob <= 1.0
+            assert (v.latency_s > eng.deadline_s) == v.deadline_miss
+
+
+@pytest.mark.slow
+class TestEndToEndDetection:
+    def test_fleet_detection_regression(self):
+        """Seeded small-budget train + port + quantize: the serving path must
+        flag attacked plants after onset and stay quiet on the benign one,
+        across >= 3 scenarios."""
+        from repro.core import porting
+        from repro.sim import build_dataset, get_scenario, train_detector
+        import tempfile
+
+        x, y = build_dataset(normal_cycles=8000, attack_cycles=2500,
+                             stride=8, seed=0, jitter=0.015, jitter_plants=2)
+        model, res = train_detector(x, y, epochs=40, patience=40, lr=1e-3)
+        assert res.test_acc > 0.70
+        with tempfile.TemporaryDirectory() as tmp:
+            model, params = porting.port_mlp(model, res.params, tmp)
+        params = quantize.quantize_params(
+            model, params, "SINT",
+            calibration=[jnp.asarray(x[i]) for i in range(0, 128, 8)])
+
+        # jitter pinned to 0: the small training budget can't also certify
+        # out-of-distribution plant heterogeneity (examples/detect_fleet.py
+        # exercises that with the full budget)
+        names = ["baseline", "recycle-starve", "tb0-spoof", "steam-throttle"]
+        fleet = build_fleet(names, seed=4242, jitter=0.0)
+        eng = StreamEngine(model, params, n_streams=len(fleet))
+        eng.warmup()
+        verdicts = eng.run(fleet, 1400)
+
+        by_stream = {}
+        for v in verdicts:
+            by_stream.setdefault(v.stream, []).append(v)
+        for i, name in enumerate(names):
+            onset = get_scenario(name).onset
+            vs = by_stream[i]
+            if onset is None:
+                fp = sum(v.pred != 0 for v in vs) / len(vs)
+                assert fp < 0.2, f"{name}: false-positive rate {fp:.2f}"
+            else:
+                post = [v for v in vs if v.cycle >= onset]
+                hits = [v for v in post if v.pred != 0]
+                assert hits, f"{name}: attack never flagged"
