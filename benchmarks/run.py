@@ -2,11 +2,23 @@
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sweeps; the
 roofline module additionally needs experiments/dryrun artifacts.
+
+Modules that return their rows also get a machine-readable perf record
+``BENCH_<name>.json`` written into ``--out-dir`` (e.g. ``BENCH_detection.json``
+for the fleet-detection fused-vs-per-layer comparison, with the serving bench
+record alongside) — CI uploads these as artifacts so perf history is diffable
+per commit.
 """
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
 
 MODULES = [
     ("layer_stacking", "Fig.4/§5.2"),
@@ -17,9 +29,26 @@ MODULES = [
     ("multipart_bench", "§6.3"),
     ("perf_gap", "§5.4"),
     ("casestudy_bench", "§7"),
+    ("serving_bench", "PR1-continuous"),
     ("detection_bench", "§7-fleet"),
     ("roofline", "§Roofline"),
 ]
+
+
+def bench_json_name(module: str) -> str:
+    short = module[:-len("_bench")] if module.endswith("_bench") else module
+    return f"BENCH_{short}.json"
+
+
+def write_bench_json(out_dir: str, module: str, ref: str, quick: bool,
+                     rows) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, bench_json_name(module))
+    with open(path, "w") as f:
+        json.dump({"module": module, "paper_ref": ref, "quick": quick,
+                   "rows": rows}, f, indent=2)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -27,6 +56,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated module names")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_<name>.json perf records")
     args = ap.parse_args()
 
     only = set(args.only.split(",")) if args.only else None
@@ -37,11 +68,15 @@ def main() -> None:
         print(f"# --- {name} ({ref}) ---", flush=True)
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main(quick=args.quick)
+            rows = mod.main(quick=args.quick)
         except Exception:
             failures += 1
             print(f"# {name} FAILED", flush=True)
             traceback.print_exc()
+            continue
+        if isinstance(rows, list) and rows and isinstance(rows[0], dict):
+            path = write_bench_json(args.out_dir, name, ref, args.quick, rows)
+            print(f"# wrote {path}", flush=True)
     if failures:
         sys.exit(f"{failures} benchmark modules failed")
 

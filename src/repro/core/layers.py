@@ -201,14 +201,17 @@ def _quantized_matvec(x: jax.Array, params: Params) -> jax.Array:
     qw = params["qw"]                      # (N, M) integer
     w_scale = params["w_scale"]            # () per-tensor or (M,) per-channel
     x_scale = params["x_scale"]            # () REAL scaling factor for inputs
-    info = jnp.iinfo(qw.dtype)
-    # Quantize activations on the fly (N float mults + round).
-    xq = jnp.clip(jnp.round(x / x_scale), info.min, info.max).astype(qw.dtype)
+    qmax = jnp.iinfo(qw.dtype).max
+    # Quantize activations on the fly (N float mults + round).  The clip is
+    # symmetric ([-qmax, qmax], matching quantize.quantize_tensor): x_scale
+    # is derived from qmax, so the extra negative code would decode outside
+    # the calibrated range.
+    xq = jnp.clip(jnp.round(x / x_scale), -qmax, qmax)
     if qw.dtype == jnp.int8:
         # Native integer dot product with a wide accumulator — the TPU MXU
         # int8 path (and the PLC's INT→DINT accumulate).
         acc = jax.lax.dot_general(
-            xq,
+            xq.astype(qw.dtype),
             qw,
             (((xq.ndim - 1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32,
@@ -217,9 +220,11 @@ def _quantized_matvec(x: jax.Array, params: Params) -> jax.Array:
         # INT/DINT: int16/int32 products overflow an int32 accumulator (and
         # TPUs have no int16/int32 MXU mode), so the arithmetic is emulated
         # in f32 — the storage compression (Table 2) is what these schemes
-        # buy on TPU; DESIGN.md §2 records the adaptation.
+        # buy on TPU; DESIGN.md §2 records the adaptation.  The clipped
+        # values stay f32 (no int round-trip): int32's qmax is not f32-
+        # representable, so the cast would overflow at the clip rail.
         acc = jax.lax.dot_general(
-            xq.astype(jnp.float32),
+            xq,
             qw.astype(jnp.float32),
             (((xq.ndim - 1,), (0,)), ((), ())),
         )

@@ -62,7 +62,11 @@ def quantize_tensor(
     else:
         absmax = jnp.max(jnp.abs(w))
     scale = jnp.maximum(absmax, 1e-12) / qmax
-    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(dtype)
+    # Clip symmetrically to [-qmax, qmax]: scale is derived from qmax, so
+    # admitting the extra negative code (-qmax - 1, e.g. -128 for SINT) lets
+    # a weight at -absmax dequantize to -absmax - scale, outside the
+    # symmetric range and past quantization_error_bound(scale).
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(dtype)
     return QuantizedTensor(q=q, scale=scale.astype(jnp.float32))
 
 

@@ -2,6 +2,9 @@
 
 * :mod:`repro.kernels.qmatmul` — int8/int16 quantized matmul with fused
   dequant epilogue (§6.1 quantization, MXU int8 path).
+* :mod:`repro.kernels.fused_mlp` — the whole detector MLP (every Dense
+  layer, activations and SINT requantization included) in ONE dispatch,
+  weights VMEM-resident (§6 loop-unrolling/fusion, re-hosted on TPU).
 * :mod:`repro.kernels.sparse_matmul` — block-sparse matmul skipping pruned
   blocks (§6.2 operation skipping, made structural for the MXU).
 * :mod:`repro.kernels.ssd_scan` — Mamba-2 SSD chunked scan (assigned
@@ -11,6 +14,14 @@
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import quantized_matmul, sparse_dense, ssd
+from repro.kernels.fused_mlp import FUSED_ACTIVATIONS, FusedLayer
+from repro.kernels.ops import (can_fuse, dense_stack, fused_forward,
+                               model_fusable, quantized_matmul, sparse_dense,
+                               ssd)
 
-__all__ = ["ops", "ref", "quantized_matmul", "sparse_dense", "ssd"]
+# NB: the fused_mlp *function* is deliberately not re-exported here — it
+# would shadow the repro.kernels.fused_mlp submodule on the package object;
+# call it via ops.fused_forward or import the submodule directly.
+__all__ = ["ops", "ref", "FUSED_ACTIVATIONS", "FusedLayer",
+           "can_fuse", "dense_stack", "fused_forward", "model_fusable",
+           "quantized_matmul", "sparse_dense", "ssd"]

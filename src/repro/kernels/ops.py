@@ -10,16 +10,22 @@ full-size runs use the oracle math (same numerics) while kernel tests pin
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.layers import Dense, Input
 from repro.core.prune import BlockSparseWeight
 from repro.kernels import ref
+from repro.kernels.fused_mlp import (FUSED_ACTIVATIONS, FusedLayer,
+                                     VMEM_BUDGET_BYTES,
+                                     fused_mlp as _fused_pallas)
 from repro.kernels.qmatmul import qmatmul as _qmatmul_pallas
 from repro.kernels.sparse_matmul import sparse_matmul as _sparse_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+LayerStack = Sequence[Tuple[Dict[str, jax.Array], str]]
 
 
 def _on_tpu() -> bool:
@@ -66,7 +72,12 @@ def quantized_matmul(
     xp = _pad_to(_pad_to(xq, 0, block_m), 1, block)
     wp = _pad_to(_pad_to(wq, 0, block), 1, block)
     scale_p = _pad_to(jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (n,)), 0, block)
-    bias_p = None if bias is None else _pad_to(bias, 0, block)
+    # Normalize bias exactly like scale: ref.qmatmul_ref broadcasts whatever
+    # it gets, so a scalar or non-f32 bias must become a f32 (n,) vector
+    # before padding or the pallas path diverges from (or rejects) what the
+    # oracle accepts.
+    bias_p = None if bias is None else _pad_to(
+        jnp.broadcast_to(jnp.asarray(bias, jnp.float32), (n,)), 0, block)
     out = _qmatmul_pallas(
         xp, wp, scale_p, bias_p,
         block_m=block_m,
@@ -75,6 +86,121 @@ def quantized_matmul(
         interpret=not _on_tpu(),
     )
     return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-MLP forward (the detector's single-dispatch verdict step)
+# ---------------------------------------------------------------------------
+
+
+def dense_stack(model, params) -> list:
+    """(params, activation) per Dense node in schedule order — the
+    layer-stack layout shared by ``StreamEngine``, ``sim.detector`` and
+    :func:`fused_forward`."""
+    return [(params[n.uid], n.layer.activation)
+            for n in model.graph.nodes if isinstance(n.layer, Dense)]
+
+
+def model_fusable(model, stack: LayerStack) -> bool:
+    """True when ``stack`` (built from ``model``) can run as one fused
+    dispatch: every node is Input/Dense — a non-Dense node would have been
+    dropped from the stack — and the stack itself passes :func:`can_fuse`."""
+    return (all(isinstance(n.layer, (Input, Dense))
+                for n in model.graph.nodes)
+            and can_fuse(stack))
+
+
+def can_fuse(stack: LayerStack) -> bool:
+    """True when a layer stack can run as one fused Pallas dispatch.
+
+    Requires every layer to be a plain or §6.1-quantized Dense param dict
+    (``w``/``qw``) with a pad-safe (element-wise) activation, and the whole
+    padded stack to fit the kernel's VMEM budget — oversized stacks fall
+    back to the per-layer path instead of failing at dispatch time.
+    """
+    if not stack:
+        return False
+    pad128 = lambda v: -(-v // 128) * 128
+    vmem_bytes = 0
+    for p, act in stack:
+        if act not in FUSED_ACTIVATIONS:
+            return False
+        if "qw" in p:
+            if p["qw"].ndim != 2 or "w_scale" not in p or "x_scale" not in p:
+                return False
+            w = p["qw"]
+        elif "w" not in p or p["w"].ndim != 2:
+            return False
+        else:
+            w = p["w"]
+        # Mirror fused_mlp's estimate at the worst-case 128-row tile.
+        kp, np_ = pad128(w.shape[0]), pad128(w.shape[1])
+        vmem_bytes += kp * np_ * w.dtype.itemsize + 8 * np_
+        vmem_bytes += 128 * max(kp, np_) * 4
+    return vmem_bytes <= VMEM_BUDGET_BYTES
+
+
+def _fused_layer(p: Dict[str, jax.Array], act: str, block: int) -> FusedLayer:
+    """Pad one layer's params into the fused kernel's VMEM layout."""
+    if "qw" in p:
+        qw = p["qw"]
+        n = qw.shape[1]
+        wp = _pad_to(_pad_to(qw, 0, block), 1, block)
+        combined = jnp.broadcast_to(
+            jnp.asarray(p["x_scale"] * p["w_scale"], jnp.float32), (n,))
+        scale = _pad_to(combined, 0, block)[None, :]
+        x_scale = jnp.asarray(p["x_scale"], jnp.float32).reshape(1, 1)
+    else:
+        w = p["w"]
+        n = w.shape[1]
+        wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, block), 1, block)
+        scale = x_scale = None
+    b = p.get("b")
+    bias = _pad_to(
+        jnp.broadcast_to(
+            jnp.zeros((), jnp.float32) if b is None
+            else jnp.asarray(b, jnp.float32), (n,)),
+        0, block)[None, :]
+    return FusedLayer(w=wp, bias=bias, scale=scale, x_scale=x_scale, act=act)
+
+
+def fused_forward(
+    x: jax.Array,
+    stack: LayerStack,
+    *,
+    backend: str = "auto",
+    block: int = 128,
+) -> jax.Array:
+    """Whole Dense stack in ONE dispatch: ``x -> logits`` (M, N_last).
+
+    ``stack`` is ``[(layer_params, activation), ...]`` in schedule order —
+    the ``StreamEngine`` layer-stack layout; params may be float (``w``) or
+    §6.1-quantized (``qw``/``w_scale``/``x_scale``) per layer.  All weights
+    are staged into VMEM once and activations never round-trip to HBM
+    between layers; SINT layers requantize in-kernel (int8 MXU layer to
+    layer).
+
+    backend: 'auto' (pallas on TPU else oracle), 'pallas' (interpret
+    off-TPU), 'ref'.
+    """
+    if not can_fuse(stack):
+        raise ValueError("layer stack is not fusable; see ops.can_fuse")
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        return ref.fused_mlp_ref(x, stack)
+    m = x.shape[0]
+    n_out = (stack[-1][0]["qw"] if "qw" in stack[-1][0]
+             else stack[-1][0]["w"]).shape[1]
+    # Small-M row granule, like quantized_matmul: a fleet-sized batch pads to
+    # the minimum sublane tile of the narrowest dtype in the stack (int8 MXU
+    # wants 32 rows, f32 8), not to a full 128 block.
+    granule = 32 if any(
+        "qw" in p and p["qw"].dtype == jnp.int8 for p, _ in stack) else 8
+    block_m = min(block, max(granule, -(-m // granule) * granule))
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, block_m), 1, block)
+    layers = [_fused_layer(p, act, block) for p, act in stack]
+    out = _fused_pallas(xp, layers, block_m=block_m,
+                        interpret=not _on_tpu())
+    return out[:m, :n_out]
 
 
 # ---------------------------------------------------------------------------

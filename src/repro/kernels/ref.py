@@ -6,11 +6,12 @@ must match (asserted over shape/dtype sweeps in ``tests/test_kernels.py``).
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.layers import ACTIVATIONS
 from repro.core.prune import BlockSparseWeight
 
 
@@ -28,6 +29,52 @@ def qmatmul_ref(
     if bias is not None:
         out = out + bias
     return out
+
+
+def dense_layer_ref(x: jax.Array, p: Dict[str, jax.Array], act: str) -> jax.Array:
+    """One Dense layer over an (M, K) batch, float or quantized (§6.1).
+
+    The single-layer building block of :func:`fused_mlp_ref`; semantics match
+    ``layers._quantized_matvec`` exactly (symmetric clip to ``[-qmax, qmax]``,
+    int8 native int32 accumulation, INT/DINT emulated in f32).
+    """
+    if "qw" in p:
+        qw = p["qw"]
+        qmax = jnp.iinfo(qw.dtype).max
+        xq = jnp.clip(jnp.round(x / p["x_scale"]), -qmax, qmax)
+        if qw.dtype == jnp.int8:
+            acc = jax.lax.dot_general(
+                xq.astype(qw.dtype), qw, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            ).astype(jnp.float32)
+        else:
+            # f32 emulation without the int round-trip, matching the fused
+            # kernel (int32's qmax is not f32-representable; the cast would
+            # overflow at the clip rail).
+            acc = jax.lax.dot_general(
+                xq, qw.astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+            )
+        y = acc * (p["x_scale"] * p["w_scale"])
+        if p.get("b") is not None:
+            y = y + p["b"]
+    else:
+        y = x @ p["w"]
+        if p.get("b") is not None:
+            y = y + p["b"]
+    return ACTIVATIONS[act](y)
+
+
+def fused_mlp_ref(
+    x: jax.Array,
+    stack: Sequence[Tuple[Dict[str, jax.Array], str]],
+) -> jax.Array:
+    """Whole Dense stack, layer by layer in pure jnp — the fused kernel's
+    oracle.  ``stack`` is ``[(layer_params, activation_name), ...]`` in
+    schedule order (the ``StreamEngine`` layer-stack layout)."""
+    for p, act in stack:
+        x = dense_layer_ref(x, p, act)
+    return x
 
 
 def sparse_matmul_ref(x: jax.Array, w: BlockSparseWeight) -> jax.Array:

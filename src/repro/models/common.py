@@ -94,11 +94,23 @@ def linear(p: Params, x: jax.Array) -> jax.Array:
         qw = p["qw"]
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-        info = jnp.iinfo(qw.dtype)
-        xq = jnp.clip(jnp.round(x2 / p["x_scale"]), info.min, info.max).astype(qw.dtype)
-        y = kops.quantized_matmul(
-            xq, qw, p["x_scale"] * p["w_scale"], p.get("b")
-        )
+        # Symmetric clip, matching quantize.quantize_tensor's weight range
+        # (the extra negative code would decode outside [-absmax, absmax]).
+        qmax = jnp.iinfo(qw.dtype).max
+        xq = jnp.clip(jnp.round(x2 / p["x_scale"]), -qmax, qmax)
+        scale = p["x_scale"] * p["w_scale"]
+        if qw.dtype == jnp.int8:
+            # SINT: native int8 dot with int32 accumulation (qmatmul path).
+            y = kops.quantized_matmul(xq.astype(qw.dtype), qw, scale,
+                                      p.get("b"))
+        else:
+            # INT/DINT: int16/int32 products overflow int32 accumulation,
+            # and int32's qmax is not f32-representable (the int round-trip
+            # would overflow at the clip rail) — emulate in f32, exactly
+            # like layers._quantized_matvec / streams._dense_batched.
+            y = xq @ qw.astype(jnp.float32) * scale
+            if p.get("b") is not None:
+                y = y + p["b"]
         return y.reshape(*lead, qw.shape[-1]).astype(x.dtype)
     y = x @ p["w"].astype(x.dtype)
     if "b" in p:

@@ -15,6 +15,12 @@ Quantized serving (§6.1) runs the same step with SINT/INT/DINT params from
 (oracle math on CPU, kernel on TPU); INT/DINT layers use the f32-emulated
 integer arithmetic, exactly like ``layers._quantized_matvec``.
 
+For all-Dense models (the detector) the per-layer loop is replaced by the
+fused whole-MLP kernel (``repro.kernels.fused_mlp``): every verdict step is
+ONE Pallas dispatch with all weights VMEM-resident and, under SINT, in-kernel
+requantization between layers — the §6 fused-quantized-arithmetic
+optimization re-hosted on TPU.
+
 Between verdict cycles the engine touches no device state at all: readings
 accumulate host-side and are scattered into the ring inside the next detector
 step, so a stride-10 fleet pays one dispatch per verdict cadence rather than
@@ -33,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import msf_detector as spec
-from repro.core.layers import ACTIVATIONS, Dense
+from repro.core.layers import ACTIVATIONS
 from repro.core.model import Model, ParamTree
 from repro.kernels import ops
 
@@ -71,10 +77,7 @@ class StreamStats:
 
 def _layer_stack(model: Model, params: ParamTree) -> List[Tuple[Dict, str]]:
     """(params, activation) per Dense node in schedule order."""
-    stack = []
-    for node in model.graph.nodes:
-        if isinstance(node.layer, Dense):
-            stack.append((params[node.uid], node.layer.activation))
+    stack = ops.dense_stack(model, params)
     if not stack:
         raise ValueError("model has no Dense layers to serve")
     return stack
@@ -84,18 +87,22 @@ def _dense_batched(x: jax.Array, p: Dict, act: str, backend: str) -> jax.Array:
     """One Dense layer over a (M, K) batch, float or quantized (§6.1)."""
     if "qw" in p:
         qw = p["qw"]
-        info = jnp.iinfo(qw.dtype)
-        xq = jnp.clip(jnp.round(x / p["x_scale"]), info.min, info.max)
-        xq = xq.astype(qw.dtype)
+        # Symmetric activation clip, matching quantize.quantize_tensor and
+        # layers._quantized_matvec (the scale decodes [-qmax, qmax]).
+        qmax = jnp.iinfo(qw.dtype).max
+        xq = jnp.clip(jnp.round(x / p["x_scale"]), -qmax, qmax)
         scale = p["x_scale"] * p["w_scale"]
         if qw.dtype == jnp.int8:
             # SINT: native int8 dot product — the Pallas qmatmul MXU path.
-            y = ops.quantized_matmul(xq, qw, scale, p.get("b"), backend=backend)
+            y = ops.quantized_matmul(xq.astype(qw.dtype), qw, scale,
+                                     p.get("b"), backend=backend)
         else:
             # INT/DINT: int16/int32 products overflow int32 accumulation on
             # TPU, so the integer arithmetic is emulated in f32 (storage
-            # compression is what these schemes buy — see layers.py).
-            y = xq.astype(jnp.float32) @ qw.astype(jnp.float32) * scale
+            # compression is what these schemes buy — see layers.py).  No
+            # round-trip through the int dtype: int32's qmax is not f32-
+            # representable, so the cast would overflow at the clip rail.
+            y = xq @ qw.astype(jnp.float32) * scale
             if p.get("b") is not None:
                 y = y + p["b"]
     else:
@@ -115,8 +122,17 @@ class StreamEngine:
     unrolling the windows oldest-first, and the batched (quantized) MLP —
     happens in one jitted step with the ring donated.
 
-    ``backend`` is forwarded to the int8 qmatmul path: 'auto' (Pallas on TPU,
+    ``backend`` is forwarded to the Pallas paths: 'auto' (Pallas on TPU,
     oracle math on CPU), 'pallas' (interpret mode off-TPU), or 'ref'.
+
+    When the model is an all-Dense stack with pad-safe activations (the
+    detector's case), the batched MLP runs through
+    ``ops.fused_forward`` — ONE Pallas dispatch for the whole network,
+    weights VMEM-resident, activations never round-tripping to HBM, SINT
+    requantizing in-kernel between layers.  ``fused=None`` (default)
+    auto-selects; ``fused=False`` forces the per-layer loop (one
+    qmatmul/matmul dispatch per layer); ``fused=True`` raises if the model
+    cannot fuse.
     """
 
     def __init__(self, model: Model, params: ParamTree, *,
@@ -127,7 +143,8 @@ class StreamEngine:
                  deadline_s: float = spec.DEADLINE_S,
                  norm_mean: Sequence[float] = spec.NORM_MEAN,
                  norm_std: Sequence[float] = spec.NORM_STD,
-                 backend: str = "auto"):
+                 backend: str = "auto",
+                 fused: Optional[bool] = None):
         (input_size,) = model.input_shape
         if window is None:
             window = input_size // n_features
@@ -149,10 +166,21 @@ class StreamEngine:
             raise ValueError("norm_mean/norm_std must have one entry per feature")
         self._stack = _layer_stack(model, params)
         self._backend = backend
+        fusable = ops.model_fusable(model, self._stack)
+        if fused and not fusable:
+            raise ValueError(
+                "fused=True but the model is not an all-Dense stack with "
+                "fusable activations")
+        # Constructor-only knob: captured as a local so a post-compile
+        # mutation of the attribute can't leave already-traced step shapes
+        # on a different path than freshly-traced ones.
+        self.fused = use_fused = fusable if fused is None else fused
 
         w = window
 
         def _forward(win: jax.Array) -> jax.Array:
+            if use_fused:
+                return ops.fused_forward(win, self._stack, backend=backend)
             x = win
             for p, act in self._stack:
                 x = _dense_batched(x, p, act, backend)

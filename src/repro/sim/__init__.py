@@ -1,4 +1,5 @@
-from repro.sim.detector import TrainResult, build_detector, train_detector
+from repro.sim.detector import (TrainResult, batched_forward, build_detector,
+                                train_detector)
 from repro.sim.msf import (ATTACK_NAMES, AttackEvent, CascadePID, CycleReading,
                            MSFPlant, PlantParams, PlantStream, SimTrace, adc,
                            build_dataset, make_attack, make_attacks, simulate)
@@ -6,7 +7,8 @@ from repro.sim.scenarios import (SCENARIOS, Scenario, build_fleet,
                                  get_scenario, jitter_params, list_scenarios,
                                  register_scenario, scenario_table)
 
-__all__ = ["TrainResult", "build_detector", "train_detector", "ATTACK_NAMES",
+__all__ = ["TrainResult", "batched_forward", "build_detector",
+           "train_detector", "ATTACK_NAMES",
            "AttackEvent", "CascadePID", "CycleReading", "MSFPlant",
            "PlantParams", "PlantStream", "SimTrace", "adc", "build_dataset",
            "make_attack", "make_attacks", "simulate", "SCENARIOS", "Scenario",

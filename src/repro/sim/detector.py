@@ -23,6 +23,7 @@ from repro.configs import msf_detector as spec
 from repro.core import layers as L
 from repro.core import sequential
 from repro.core.model import Model, ParamTree
+from repro.kernels import ops
 
 
 def build_detector() -> Model:
@@ -31,6 +32,20 @@ def build_detector() -> Model:
         [L.Input()] + hidden + [L.Dense(units=spec.CLASSES, activation="linear")],
         (spec.INPUT_SIZE,),
     )
+
+
+def batched_forward(model: Model, params: ParamTree, x: jax.Array, *,
+                    backend: str = "auto") -> jax.Array:
+    """Whole-batch detector logits: ``(M, in) -> (M, classes)``.
+
+    All-Dense stacks (the detector, float or §6.1-quantized) run through the
+    fused whole-MLP path — one Pallas dispatch, weights VMEM-resident; other
+    models fall back to a vmapped per-sample ``model.apply``.
+    """
+    stack = ops.dense_stack(model, params)
+    if ops.model_fusable(model, stack):
+        return ops.fused_forward(x, stack, backend=backend)
+    return jax.vmap(model.apply, in_axes=(None, 0))(params, x)
 
 
 def sparse_ce(logits: jax.Array, labels: jax.Array) -> jax.Array:
@@ -88,7 +103,9 @@ def train_detector(
 
     @jax.jit
     def accuracy(p, xb, yb):
-        pred = jnp.argmax(batched_apply(p, xb), axis=-1)
+        # Evaluation goes through the fused whole-MLP path (training's
+        # gradient path stays on the vmapped apply above).
+        pred = jnp.argmax(batched_forward(model, p, xb), axis=-1)
         return jnp.mean(pred == yb)
 
     m = jax.tree.map(jnp.zeros_like, params)

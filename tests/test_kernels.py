@@ -83,6 +83,27 @@ class TestQMatmul:
         np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                    rtol=1e-5, atol=1e-4)
 
+    @pytest.mark.parametrize("bias", [
+        0.75,                                        # python scalar
+        np.float64(0.75),                            # 0-d f64 scalar
+        np.linspace(-1, 1, 70).astype(np.float64),   # (n,) f64 vector
+        np.float32(0.75) * np.ones((70,), np.float32),
+    ], ids=["py-scalar", "f64-scalar", "f64-vector", "f32-vector"])
+    def test_bias_normalized_like_ref(self, bias):
+        """Regression: the wrapper must normalize bias to a f32 (n,) vector
+        before padding — ref.qmatmul_ref broadcasts whatever it gets, and
+        scalar / f64 biases used to crash or diverge on the pallas path."""
+        xq = jax.random.randint(jax.random.PRNGKey(0), (5, 200), -127, 127,
+                                jnp.int8)
+        wq = jax.random.randint(jax.random.PRNGKey(1), (200, 70), -127, 127,
+                                jnp.int8)
+        s = jnp.full((70,), 1e-2, jnp.float32)
+        out = ops.quantized_matmul(xq, wq, s, bias, backend="pallas")
+        want = ref.qmatmul_ref(xq, wq, s, bias)
+        assert out.dtype == jnp.float32 and out.shape == (5, 70)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
 
 class TestSparseMatmul:
     @pytest.mark.parametrize("sparsity", [0.0, 0.3, 0.6, 0.9])

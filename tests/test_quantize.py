@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import layers as L, quantize, sequential
 
@@ -113,3 +114,24 @@ class TestQuantizedInference:
         qp = quantize.quantize_params(m, p, "SINT", only_nodes=[1])
         assert "qw" in qp[1] and "qw" not in qp[2]
         assert "w" in qp[2]
+
+
+class TestModelLinearQuantized:
+    """models.common.linear must follow the same §6.1 semantics as
+    layers._quantized_matvec: symmetric clip, int8 native accumulation,
+    INT/DINT emulated in f32 (int16/int32 products overflow the int32
+    accumulator — the old path produced wrapped garbage at 512-wide dots)."""
+
+    @pytest.mark.parametrize("scheme", ("SINT", "INT", "DINT"))
+    def test_matches_dequantized_reference(self, scheme):
+        from repro.models import common
+        p = common.linear_init(jax.random.PRNGKey(0), 512, 64, bias=True,
+                               quant=scheme)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 512), jnp.float32)
+        y = np.asarray(common.linear(p, x))
+        qmax = float(jnp.iinfo(p["qw"].dtype).max)
+        xq = jnp.clip(jnp.round(x / p["x_scale"]), -qmax, qmax)
+        want = (xq * p["x_scale"]) @ (
+            p["qw"].astype(jnp.float32) * p["w_scale"]) + p["b"]
+        assert np.isfinite(y).all()
+        np.testing.assert_allclose(y, np.asarray(want), rtol=1e-3, atol=1e-3)
