@@ -1,4 +1,5 @@
-"""Fleet detection serving: fused vs per-layer steps vs naive loop.
+"""Fleet detection serving: fused vs per-layer steps vs naive loop, plus
+multi-device fleet-sharding scaling rows.
 
 Workload: a >=16-plant fleet of mixed scenarios streaming at the scan cycle.
 All paths see the identical pre-generated reading matrix (simulation cost is
@@ -12,8 +13,18 @@ excluded); we report windows/s and p99 verdict latency for
     Dense layer) and the fused whole-MLP kernel (ONE Pallas dispatch per
     verdict step, weights VMEM-resident, in-kernel SINT requantization).
 
+**Device scaling** (``detect_fleet_shard_d<N>`` rows): the stream-axis
+sharded engine at 1/2/4/8 devices (1/2 under ``--quick``), each device
+owning a ``spec.STREAMS_PER_DEVICE``-plant shard of the fleet (weak
+scaling — the fleet grows with the mesh, which is the fleet-service
+deployment question: how many plants does a d-device mesh serve?).  Each
+device count runs in a child process so ``XLA_FLAGS=
+--xla_force_host_platform_device_count`` can fan out host devices; on a
+multi-core host the rows show the aggregate windows/s growing with the
+mesh, and on real multi-chip hardware each shard runs on its own core.
+
 ``benchmarks/run.py`` persists the returned rows as ``BENCH_detection.json``
-(the fused-vs-per-layer perf record for the 16-plant fleet).
+(the fused-vs-per-layer + device-scaling perf record).
 
 Run:  PYTHONPATH=src python benchmarks/detection_bench.py [--quick]
 """
@@ -21,7 +32,9 @@ Run:  PYTHONPATH=src python benchmarks/detection_bench.py [--quick]
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import subprocess
 import sys
 import time
 
@@ -37,20 +50,14 @@ from benchmarks.common import emit
 from repro.configs import msf_detector as spec
 from repro.core import quantize
 from repro.serving import StreamEngine
-from repro.sim import build_detector, build_fleet
+from repro.sim import build_detector, fleet_readings
 
 Row = dict
 
 
 def generate_readings(n_streams: int, n_cycles: int, seed: int) -> np.ndarray:
     """(C, S, F) raw sensor readings from a mixed-scenario fleet."""
-    fleet = build_fleet(n_plants=n_streams, seed=seed)
-    out = np.zeros((n_cycles, n_streams, spec.N_FEATURES), np.float32)
-    for c in range(n_cycles):
-        for i, s in enumerate(fleet):
-            r = s.step()
-            out[c, i] = (r.tb0_meas, r.wd_meas)
-    return out
+    return fleet_readings(n_streams, n_cycles, seed=seed)
 
 
 def run_engine(model, params, readings, *, stride: int,
@@ -59,11 +66,22 @@ def run_engine(model, params, readings, *, stride: int,
     eng = StreamEngine(model, params, n_streams=n_streams, stride=stride,
                        fused=fused)
     eng.warmup()
-    t0 = time.perf_counter()
-    for c in range(n_cycles):
-        eng.ingest(readings[c])
-    wall = time.perf_counter() - t0
-    return eng.stats.windows, wall, eng.stats.latency_p(99)
+    # Ring fill is uncounted; steady-state passes are timed and the best
+    # kept (shared-core CI contention otherwise dominates the step time).
+    for c in range(min(spec.WINDOW, n_cycles)):
+        eng.ingest(readings[c % n_cycles])
+    best = None
+    for _ in range(2):
+        w0 = eng.stats.windows
+        t0 = time.perf_counter()
+        for c in range(n_cycles):
+            eng.ingest(readings[c])
+        wall = time.perf_counter() - t0
+        windows = eng.stats.windows - w0
+        if best is None or wall / max(windows, 1) < \
+                best[1] / max(best[0], 1):
+            best = (windows, wall)
+    return best[0], best[1], eng.stats.latency_p(99)
 
 
 def run_naive(model, params, readings, *, stride: int) -> tuple:
@@ -76,30 +94,143 @@ def run_naive(model, params, readings, *, stride: int) -> tuple:
     # warmup compile outside the timed region (same courtesy as the engine)
     jax.block_until_ready(apply1(params, jnp.zeros((window * n_feat,))))
     rings = np.zeros((n_streams, window, n_feat), np.float32)
-    windows = 0
+    count = 0
     latencies = []
-    t0 = time.perf_counter()
-    for c in range(n_cycles):
-        tc = time.perf_counter()
-        norm = (readings[c] - mean) / std
-        rings = np.roll(rings, -1, axis=1)
-        rings[:, -1, :] = norm
-        count = c + 1
-        if count >= window and (count - window) % stride == 0:
-            outs = []
-            for i in range(n_streams):
-                outs.append(apply1(params, jnp.asarray(rings[i].reshape(-1))))
-            for o in outs:
-                jax.block_until_ready(o)
-            windows += n_streams
-            latencies.append(time.perf_counter() - tc)
-    wall = time.perf_counter() - t0
+
+    def run_pass():
+        nonlocal rings, count
+        windows = 0
+        t0 = time.perf_counter()
+        for c in range(n_cycles):
+            tc = time.perf_counter()
+            norm = (readings[c] - mean) / std
+            rings = np.roll(rings, -1, axis=1)
+            rings[:, -1, :] = norm
+            count += 1
+            if count >= window and (count - window) % stride == 0:
+                outs = []
+                for i in range(n_streams):
+                    outs.append(
+                        apply1(params, jnp.asarray(rings[i].reshape(-1))))
+                for o in outs:
+                    jax.block_until_ready(o)
+                windows += n_streams
+                latencies.append(time.perf_counter() - tc)
+        return windows, time.perf_counter() - t0
+
+    # same steady-state best-of-2 discipline as run_engine
+    run_pass()
+    windows, wall = min((run_pass() for _ in range(2)),
+                        key=lambda r: r[1] / max(r[0], 1))
     p99 = float(np.percentile(latencies, 99)) if latencies else 0.0
     return windows, wall, p99
 
 
+def synthetic_readings(n_streams: int, n_cycles: int, seed: int) -> np.ndarray:
+    """Gaussian readings around the nominal operating point — engine timing
+    is content-independent, and python-stepping thousands of PlantStreams
+    would dwarf the serve clock at sharded fleet sizes."""
+    rng = np.random.default_rng(seed)
+    return (np.asarray(spec.NORM_MEAN, np.float32)
+            + rng.normal(size=(n_cycles, n_streams, spec.N_FEATURES))
+            .astype(np.float32) * np.asarray(spec.NORM_STD, np.float32))
+
+
+def shard_worker(n_devices: int, n_streams: int, n_cycles: int) -> None:
+    """One device-scaling measurement, run in a child process whose
+    XLA_FLAGS fanned out ``n_devices`` host devices.  Prints a single
+    ``SHARD_ROW {json}`` line for the parent to collect."""
+    from repro.launch.mesh import make_fleet_mesh
+
+    if len(jax.devices()) < n_devices:
+        raise RuntimeError(
+            f"worker needs {n_devices} devices, sees {len(jax.devices())}")
+    model = build_detector()
+    params = model.init_params(jax.random.PRNGKey(0))
+    calib = [jnp.asarray(np.random.default_rng(1).normal(size=spec.INPUT_SIZE)
+                         .astype(np.float32)) for _ in range(8)]
+    params = quantize.quantize_params(model, params, "SINT",
+                                      calibration=calib)
+    readings = synthetic_readings(n_streams, n_cycles, seed=n_devices)
+    # Timed as a full serve lifecycle — cold ring, fill cycles, verdicts —
+    # because that's the deployment question the mesh answers: cycles of
+    # host ingest cost the same regardless of fleet size, so a d-device
+    # mesh serving d shards amortizes the scan-cycle tax d ways.  Best of
+    # two lifecycles (fresh engine each; shared-core CI boxes are noisy).
+    best = None
+    for rep in range(2):
+        eng = StreamEngine(model, params, n_streams=n_streams,
+                           stride=spec.STRIDE, mesh=make_fleet_mesh(n_devices))
+        eng.warmup()
+        t0 = time.perf_counter()
+        for c in range(n_cycles):
+            eng.ingest(readings[c])
+        wall = time.perf_counter() - t0
+        if best is None or wall < best[1]:
+            best = (eng.stats.windows, wall, eng.stats.latency_p(99))
+    print("SHARD_ROW " + json.dumps({
+        "devices": n_devices, "streams": n_streams,
+        "windows": best[0], "wall_s": best[1],
+        "p99_s": best[2]}), flush=True)
+
+
+def run_scaling(quick: bool) -> list:
+    """Fan out one child per device count; return the scaling Rows."""
+    counts = (1, 2) if quick else (1, 2, 4, 8)
+    # Long enough that verdict steps dominate the lifecycle (the fill is
+    # 200 of these cycles); scaling rows keep it fixed across --quick so
+    # records stay comparable.
+    n_cycles = 1200
+
+    def spawn(d):
+        env = dict(os.environ)
+        env["JAX_PLATFORMS"] = env.get("JAX_PLATFORMS", "cpu")
+        if d > 1:
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                f" --xla_force_host_platform_device_count={d}").strip()
+        cmd = [sys.executable, os.path.abspath(__file__), "--shard-worker",
+               "--devices", str(d),
+               "--streams", str(spec.STREAMS_PER_DEVICE * d),
+               "--cycles", str(n_cycles)]
+        out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                             timeout=1800)
+        if out.returncode != 0:
+            sys.stderr.write(out.stderr)
+            raise RuntimeError(f"shard worker (devices={d}) failed")
+        line = [ln for ln in out.stdout.splitlines()
+                if ln.startswith("SHARD_ROW ")][-1]
+        return json.loads(line[len("SHARD_ROW "):])
+
+    # Three interleaved sweeps, median wall per device count: a transient
+    # load burst on a shared CI box then taxes sweeps, not device counts,
+    # and the median discards the outlier epoch in either direction.
+    samples = {d: [] for d in counts}
+    for _ in range(3):
+        for d in counts:
+            samples[d].append(spawn(d))
+    results = [sorted(samples[d], key=lambda r: r["wall_s"])[1]
+               for d in counts]
+
+    rows = []
+    wps_1dev = results[0]["windows"] / results[0]["wall_s"]
+    for r in results:
+        wps = r["windows"] / r["wall_s"]
+        rows.append({
+            "name": f"detect_fleet_shard_d{r['devices']}",
+            "us_per_call": r["wall_s"] / max(r["windows"], 1) * 1e6,
+            "derived": f"devices={r['devices']};streams={r['streams']};"
+                       f"windows_s={wps:.0f};p99_ms={r['p99_s'] * 1e3:.2f};"
+                       f"vs_1dev={wps / wps_1dev:.2f}x"})
+        print(f"# shard d{r['devices']}: {r['streams']} plants, "
+              f"{wps:.0f} windows/s ({wps / wps_1dev:.2f}x vs 1 device)")
+    return rows
+
+
 def main(quick: bool = False, n_streams: int = 16, n_cycles: int = 0):
     n_cycles = n_cycles or (400 if quick else 1200)
+    # A run too short to complete one window emits zero verdicts and every
+    # windows/s ratio degenerates — clamp to the first verdict cycle.
+    n_cycles = max(n_cycles, spec.WINDOW + spec.STRIDE)
     stride = spec.STRIDE
 
     print(f"# fleet: {n_streams} plants, {n_cycles} cycles, "
@@ -148,6 +279,9 @@ def main(quick: bool = False, n_streams: int = 16, n_cycles: int = 0):
                                 f"p99_ms={p99_f * 1e3:.2f};"
                                 f"vs_naive={wps_f / wps_naive:.2f}x;"
                                 f"vs_perlayer={fused_gain:.2f}x"})
+    print(f"# device scaling ({spec.STREAMS_PER_DEVICE} plants/device)")
+    rows.extend(run_scaling(quick))
+
     emit(rows)
     print(f"# fused SINT vs naive float: {speedup_sint:.2f}x windows/s; "
           f"fused vs per-layer step: {fused_vs_perlayer_sint:.2f}x")
@@ -159,5 +293,12 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--streams", type=int, default=16)
     ap.add_argument("--cycles", type=int, default=0)
+    ap.add_argument("--shard-worker", action="store_true",
+                    help="internal: one device-scaling measurement "
+                         "(spawned by run_scaling with XLA_FLAGS set)")
+    ap.add_argument("--devices", type=int, default=1)
     a = ap.parse_args()
-    main(quick=a.quick, n_streams=a.streams, n_cycles=a.cycles)
+    if a.shard_worker:
+        shard_worker(a.devices, a.streams, a.cycles)
+    else:
+        main(quick=a.quick, n_streams=a.streams, n_cycles=a.cycles)

@@ -7,10 +7,16 @@ fleet of simulated plants — each running a named scenario from
 ring-buffer windows, one jitted donated detector step per verdict cadence,
 per-window latency/deadline accounting.
 
+With ``--devices N`` the engine shards the fleet's stream axis over an
+N-device ``("data",)`` mesh — on a CPU host the devices are fanned out via
+``XLA_FLAGS=--xla_force_host_platform_device_count`` (set here before jax
+loads), on real hardware the mesh maps onto the visible accelerators.
+
 Run:
   PYTHONPATH=src python examples/detect_fleet.py --list
   PYTHONPATH=src python examples/detect_fleet.py --scenarios stealth-drift
   PYTHONPATH=src python examples/detect_fleet.py --plants 16 --quant SINT
+  PYTHONPATH=src python examples/detect_fleet.py --plants 64 --devices 4
 """
 
 import argparse
@@ -23,10 +29,28 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+
+def _fan_out_devices() -> int:
+    """--devices must act before jax initializes: host-device fan-out only
+    works through XLA_FLAGS at backend-creation time."""
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--devices", type=int, default=1)
+    args, _ = ap.parse_known_args()
+    if args.devices > 1 and "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.devices}").strip()
+    return args.devices
+
+
+_fan_out_devices()
+
 import jax.numpy as jnp
 
 from repro.configs import msf_detector as spec
 from repro.core import porting, quantize
+from repro.launch.mesh import make_fleet_mesh
 from repro.sim import (SCENARIOS, build_dataset, build_fleet, get_scenario,
                        scenario_table, train_detector)
 from repro.sim.msf import SCAN_DT
@@ -67,6 +91,9 @@ def main():
                     help="override per-scenario plant jitter")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fast", action="store_true", help="small training budget")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the fleet over this many devices "
+                         "(host devices are fanned out automatically)")
     ap.add_argument("--list", action="store_true",
                     help="print the scenario library and exit")
     args = ap.parse_args()
@@ -82,11 +109,19 @@ def main():
 
     model, params = train_and_port(args.fast, args.quant)
 
+    mesh = make_fleet_mesh(args.devices) if args.devices > 1 else None
+    shard_note = (f", sharded over {args.devices} devices "
+                  f"({-(-args.plants // args.devices)} streams/device)"
+                  if mesh is not None else "")
     print(f"== serving {args.plants} plants x {args.cycles} cycles "
-          f"({args.quant}) ==")
+          f"({args.quant}{shard_note}) ==")
     fleet = build_fleet(names, args.plants, seed=args.seed + 1000,
                         jitter=args.jitter)
-    engine = StreamEngine(model, params, n_streams=args.plants)
+    # --devices 1 pins sharding OFF even in a multi-device process, so the
+    # flag always means what the serve header prints.
+    engine = StreamEngine(model, params, n_streams=args.plants,
+                          **({"mesh": mesh} if mesh is not None
+                             else {"shard": False}))
     engine.warmup()
     flagged = collections.defaultdict(list)   # stream -> attack-verdict cycles
     for v in engine.run(fleet, args.cycles):

@@ -26,3 +26,8 @@ NORM_STD = (2.0, 0.5)
 # window completing (the §7 real-time budget), across this many plants.
 DEADLINE_S = SCAN_CYCLE_MS / 1000.0
 FLEET_STREAMS = 16
+
+# Stream-axis sharding: per-device shard of the fleet arena used by the
+# device-scaling benchmark rows (a d-device mesh serves d x this many
+# plants; benchmarks/detection_bench.py --shard-worker).
+STREAMS_PER_DEVICE = 128

@@ -35,6 +35,26 @@ def make_host_mesh() -> jax.sharding.Mesh:
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_fleet_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """A 1-D ``("data",)`` mesh for stream-axis fleet sharding.
+
+    ``StreamEngine`` partitions its per-stream ring arena over this mesh so
+    each device owns a contiguous shard of plants and runs the detector step
+    on it locally (no cross-device traffic on the hot path).  ``n_devices``
+    defaults to every visible device; a smaller count takes a prefix, so
+    1/2/4-way meshes can coexist in one multi-device process (the
+    sharded-parity tests rely on this).
+    """
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else n_devices
+    if not 1 <= n <= len(devices):
+        raise RuntimeError(
+            f"fleet mesh needs 1..{len(devices)} devices, asked for {n}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=<n> to "
+            "fan out host devices")
+    return jax.make_mesh((n,), ("data",), devices=devices[:n])
+
+
 def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
     """The batch-parallel axes for this mesh ('pod' folds into data)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

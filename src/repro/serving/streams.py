@@ -26,6 +26,20 @@ accumulate host-side and are scattered into the ring inside the next detector
 step, so a stride-10 fleet pays one dispatch per verdict cadence rather than
 one per scan cycle.  Per-window latency/deadline accounting follows the
 ``ServeStats`` conventions of ``serving/continuous.py``.
+
+**Fleet sharding.** On a multi-device process the engine partitions the
+stream axis over a 1-D ``("data",)`` mesh (``launch.mesh.make_fleet_mesh``):
+the ring arena, the pending-reading block and the verdict logits are all
+``NamedSharding(mesh, P("data", ...))``, and the donated step runs under
+``shard_map`` so each device executes the detector step — including the
+single fused Pallas dispatch — on its own contiguous shard of streams, with
+no cross-device traffic on the hot path.  Fleet sizes not divisible by the
+device count are padded with silent zero streams (the *pad-stream contract*):
+pad rows ride through scatter/unroll/forward like real streams, their logits
+are sliced off before any verdict is emitted, and they never enter the
+serve accounting.  Sharding is off by default on a single-device process;
+``shard=True`` / an explicit ``mesh`` forces it, ``shard=False`` pins the
+classic unsharded step.
 """
 
 from __future__ import annotations
@@ -37,11 +51,14 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import msf_detector as spec
 from repro.core.layers import ACTIVATIONS
 from repro.core.model import Model, ParamTree
 from repro.kernels import ops
+from repro.launch.mesh import make_fleet_mesh
 
 
 @dataclasses.dataclass
@@ -133,6 +150,14 @@ class StreamEngine:
     auto-selects; ``fused=False`` forces the per-layer loop (one
     qmatmul/matmul dispatch per layer); ``fused=True`` raises if the model
     cannot fuse.
+
+    ``shard``/``mesh`` control stream-axis fleet sharding (module docstring):
+    ``shard=None`` auto-enables it when the process has more than one device,
+    ``shard=True`` forces it (a 1-device mesh still runs the shard_map path),
+    ``shard=False`` pins the classic unsharded step.  ``mesh`` supplies the
+    device mesh (any mesh whose ``"data"`` axis carries the streams and whose
+    other axes, if present, have size 1); it defaults to
+    ``make_fleet_mesh()`` over every visible device.
     """
 
     def __init__(self, model: Model, params: ParamTree, *,
@@ -144,7 +169,9 @@ class StreamEngine:
                  norm_mean: Sequence[float] = spec.NORM_MEAN,
                  norm_std: Sequence[float] = spec.NORM_STD,
                  backend: str = "auto",
-                 fused: Optional[bool] = None):
+                 fused: Optional[bool] = None,
+                 shard: Optional[bool] = None,
+                 mesh: Optional[Mesh] = None):
         (input_size,) = model.input_shape
         if window is None:
             window = input_size // n_features
@@ -176,6 +203,34 @@ class StreamEngine:
         # on a different path than freshly-traced ones.
         self.fused = use_fused = fusable if fused is None else fused
 
+        if shard is False and mesh is not None:
+            raise ValueError("shard=False contradicts an explicit mesh")
+        if mesh is None and (shard or (shard is None
+                                       and len(jax.devices()) > 1)):
+            # Never mesh wider than the fleet: pure-pad shards would burn a
+            # dispatch per device on zero streams every verdict cadence.
+            mesh = make_fleet_mesh(min(len(jax.devices()), n_streams))
+        if mesh is not None:
+            if "data" not in mesh.axis_names:
+                raise ValueError(f"fleet mesh needs a 'data' axis, got "
+                                 f"{mesh.axis_names}")
+            extra = [a for a in mesh.axis_names
+                     if a != "data" and mesh.shape[a] != 1]
+            if extra:
+                raise ValueError(
+                    f"non-'data' mesh axes must have size 1, got {extra}")
+        self.mesh = mesh
+        self.n_shards = 1 if mesh is None else mesh.shape["data"]
+        # Pad-stream contract: the arena is padded so every device owns an
+        # equal contiguous shard; pad rows are zero streams whose logits are
+        # sliced off before verdicts and never enter the accounting.
+        self._s_pad = -(-n_streams // self.n_shards) * self.n_shards
+        self.shard_streams = self._s_pad // self.n_shards
+        if mesh is not None:
+            self._arena_sharding = NamedSharding(mesh, P("data", None, None))
+        else:
+            self._arena_sharding = None
+
         w = window
 
         def _forward(win: jax.Array) -> jax.Array:
@@ -204,9 +259,19 @@ class StreamEngine:
             win = jnp.take(ring, widx, axis=1).reshape(ring.shape[0], -1)
             return ring, _forward(win)
 
+        if mesh is not None:
+            # Each device runs the *whole* step body on its shard — ring
+            # scatter, window unroll and the (fused Pallas) forward are all
+            # stream-local, so the mesh introduces zero collectives.
+            # check_rep=False: pallas_call carries no replication rule.
+            _step = shard_map(_step, mesh=mesh,
+                              in_specs=(P("data"), P("data"), P()),
+                              out_specs=(P("data"), P("data")),
+                              check_rep=False)
         self._step = jax.jit(_step, donate_argnums=0)
 
-        self._ring = jnp.zeros((n_streams, window, n_features), jnp.float32)
+        self._ring = self._place(
+            jnp.zeros((self._s_pad, window, n_features), jnp.float32))
         self._pos = 0                 # next ring write index (host-tracked)
         self._count = 0               # scan cycles ingested
         self._pending: List[np.ndarray] = []
@@ -214,14 +279,24 @@ class StreamEngine:
         self.stats = StreamStats(steps=0, cycles=0, windows=0,
                                  deadline_misses=0, wall_s=0.0)
 
+    def _place(self, arr) -> jax.Array:
+        """Commit an arena-shaped array to the fleet mesh (no-op unsharded)."""
+        if self._arena_sharding is None:
+            return jnp.asarray(arr)
+        return jax.device_put(arr, self._arena_sharding)
+
     def warmup(self) -> None:
         """Compile both detector-step shapes (the warmup block is one full
         window long, steady-state blocks are ``stride`` long) outside the
-        serve clock, so deadline accounting measures serving, not XLA."""
+        serve clock, so deadline accounting measures serving, not XLA.
+        Warmup arenas carry the serve-time sharding, so the compiled
+        executables are exactly the sharded ones the steps will reuse."""
         for length in sorted({self.window, self.stride}):
-            ring = jnp.zeros_like(self._ring)
-            block = jnp.zeros((self.n_streams, length, self.n_features),
-                              jnp.float32)
+            ring = self._place(
+                jnp.zeros((self._s_pad, self.window, self.n_features),
+                          jnp.float32))
+            block = self._place(
+                jnp.zeros((self._s_pad, length, self.n_features), jnp.float32))
             _, logits = self._step(ring, block, jnp.int32(0))
             jax.block_until_ready(logits)
 
@@ -251,10 +326,16 @@ class StreamEngine:
         if self._ready():
             block = np.stack(self._pending, axis=1)        # (S, L, F)
             self._pending.clear()
+            if self._s_pad != self.n_streams:
+                block = np.pad(
+                    block, ((0, self._s_pad - self.n_streams), (0, 0), (0, 0)))
             self._ring, logits = self._step(
-                self._ring, jnp.asarray(block), jnp.int32(self._pos))
+                self._ring, self._place(block), jnp.int32(self._pos))
             self._pos = (self._pos + block.shape[1]) % self.window
+            # Gathers each device's shard of logits to the host; pad-stream
+            # rows are dropped here and never surface as verdicts.
             logits = np.asarray(jax.block_until_ready(logits))
+            logits = logits[:self.n_streams]
             self.last_logits = logits
             latency = time.perf_counter() - t0
             miss = latency > self.deadline_s

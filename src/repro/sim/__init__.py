@@ -4,13 +4,14 @@ from repro.sim.msf import (ATTACK_NAMES, AttackEvent, CascadePID, CycleReading,
                            MSFPlant, PlantParams, PlantStream, SimTrace, adc,
                            build_dataset, make_attack, make_attacks, simulate)
 from repro.sim.scenarios import (SCENARIOS, Scenario, build_fleet,
-                                 get_scenario, jitter_params, list_scenarios,
-                                 register_scenario, scenario_table)
+                                 fleet_readings, get_scenario, jitter_params,
+                                 list_scenarios, register_scenario,
+                                 scenario_table)
 
 __all__ = ["TrainResult", "batched_forward", "build_detector",
            "train_detector", "ATTACK_NAMES",
            "AttackEvent", "CascadePID", "CycleReading", "MSFPlant",
            "PlantParams", "PlantStream", "SimTrace", "adc", "build_dataset",
            "make_attack", "make_attacks", "simulate", "SCENARIOS", "Scenario",
-           "build_fleet", "get_scenario", "jitter_params", "list_scenarios",
-           "register_scenario", "scenario_table"]
+           "build_fleet", "fleet_readings", "get_scenario", "jitter_params",
+           "list_scenarios", "register_scenario", "scenario_table"]

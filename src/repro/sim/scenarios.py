@@ -147,6 +147,27 @@ def build_fleet(
     return fleet
 
 
+def fleet_readings(
+    n_streams: int,
+    n_cycles: int,
+    *,
+    names: Optional[Sequence[str]] = None,
+    seed: int = 0,
+    jitter: Optional[float] = None,
+) -> np.ndarray:
+    """A ``(n_cycles, n_streams, 2)`` raw ``(tb0_meas, wd_meas)`` matrix from
+    a scenario fleet — the pre-generated reading block the detection bench
+    and the sharded-parity tests drive engines with (simulation cost stays
+    out of the serve clock)."""
+    fleet = build_fleet(names, n_streams, seed=seed, jitter=jitter)
+    out = np.zeros((n_cycles, n_streams, 2), np.float32)
+    for c in range(n_cycles):
+        for i, s in enumerate(fleet):
+            r = s.step()
+            out[c, i] = (r.tb0_meas, r.wd_meas)
+    return out
+
+
 def scenario_table() -> str:
     """Human-readable library summary (used by examples/detect_fleet.py)."""
     rows = ["name                     families  composed  events"]

@@ -13,7 +13,7 @@ from repro.core import quantize, sequential
 from repro.kernels import ops
 from repro.serving import StreamEngine
 from repro.serving.streams import _dense_batched
-from repro.sim import build_detector, build_fleet
+from repro.sim import build_detector, fleet_readings
 from repro.sim.detector import batched_forward
 
 SCHEMES = ("REAL", "SINT", "INT", "DINT")
@@ -180,13 +180,7 @@ def small_detector(scheme, seed):
 
 
 def scenario_readings(n_streams, n_cycles, seed):
-    fleet = build_fleet(n_plants=n_streams, seed=seed)
-    out = np.zeros((n_cycles, n_streams, 2), np.float32)
-    for c in range(n_cycles):
-        for i, s in enumerate(fleet):
-            r = s.step()
-            out[c, i] = (r.tb0_meas, r.wd_meas)
-    return out
+    return fleet_readings(n_streams, n_cycles, seed=seed)
 
 
 def drive_pair(model, params, readings, *, window, stride):

@@ -1,5 +1,9 @@
 """Sharding rules + sim tests (single device: rules are pure functions)."""
 
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +12,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.launch import shardings as sh
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_fleet_mesh, make_host_mesh
 
 
 class FakeMesh:
@@ -110,6 +114,44 @@ class MeshWrap:
         import numpy as np
         devs = np.array(jax.devices()[:1]).reshape(1, 1)
         return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+class TestFleetMesh:
+    def test_default_spans_all_devices(self):
+        mesh = make_fleet_mesh()
+        assert mesh.axis_names == ("data",)
+        assert mesh.shape["data"] == len(jax.devices())
+
+    def test_prefix_subset(self):
+        mesh = make_fleet_mesh(1)
+        assert mesh.shape["data"] == 1
+        assert mesh.devices.ravel()[0] == jax.devices()[0]
+
+    def test_too_many_devices_rejected(self):
+        with pytest.raises(RuntimeError, match="fleet mesh"):
+            make_fleet_mesh(len(jax.devices()) + 1)
+        with pytest.raises(RuntimeError, match="fleet mesh"):
+            make_fleet_mesh(0)
+
+    def test_import_never_touches_device_state(self):
+        """The module docstring's contract: importing repro.launch.mesh must
+        not initialize any jax backend (smoke tests must keep seeing the
+        device topology THEY configure).  A child process imports the module
+        and then checks that no backend has been instantiated."""
+        check = (
+            "import repro.launch.mesh, repro.launch.shardings\n"
+            "from jax._src import xla_bridge\n"
+            "assert not xla_bridge._backends, list(xla_bridge._backends)\n"
+            "print('MESH_IMPORT_PURE')\n"
+        )
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")] +
+            env.get("PYTHONPATH", "").split(os.pathsep))
+        out = subprocess.run([sys.executable, "-c", check], env=env,
+                             capture_output=True, text=True, timeout=120)
+        assert out.returncode == 0, out.stderr
+        assert "MESH_IMPORT_PURE" in out.stdout
 
 
 class TestEndToEndHostMesh:
