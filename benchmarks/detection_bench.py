@@ -12,6 +12,15 @@ excluded); we report windows/s and p99 verdict latency for
     BOTH step flavors: the per-layer loop (one qmatmul/matmul dispatch per
     Dense layer) and the fused whole-MLP kernel (ONE Pallas dispatch per
     verdict step, weights VMEM-resident, in-kernel SINT requantization).
+    The two flavors are timed in *interleaved* passes (``run_engine_pair``)
+    so shared-core load transients tax both equally.
+
+**Autoencoder rows** (``detect_ae_*``): the unsupervised 400-64-16-64-400
+reconstruction detector on the identical readings, fused vs per-layer at
+REAL/SINT (SINT kept under ``--quick`` so the CI artifact always carries
+the fused autoencoder row) plus its own ``detect_ae_shard_d<N>``
+device-scaling ladder — verdicts via the ReconstructionHead's on-device
+score reduction, so sharded hosts gather one float per stream.
 
 **Device scaling** (``detect_fleet_shard_d<N>`` rows): the stream-axis
 sharded engine at 1/2/4/8 devices (1/2 under ``--quick``), each device
@@ -50,9 +59,14 @@ from benchmarks.common import emit
 from repro.configs import msf_detector as spec
 from repro.core import quantize
 from repro.serving import StreamEngine
-from repro.sim import build_detector, fleet_readings
+from repro.sim import (ReconstructionHead, build_autoencoder, build_detector,
+                       fleet_readings)
 
 Row = dict
+
+# Serving throughput is content-independent, so bench verdict thresholds
+# don't need calibration — any finite cutoff exercises the same score math.
+BENCH_AE_THRESHOLD = 1.0
 
 
 def generate_readings(n_streams: int, n_cycles: int, seed: int) -> np.ndarray:
@@ -60,32 +74,63 @@ def generate_readings(n_streams: int, n_cycles: int, seed: int) -> np.ndarray:
     return fleet_readings(n_streams, n_cycles, seed=seed)
 
 
-def run_engine(model, params, readings, *, stride: int,
-               fused: bool = True) -> tuple:
+def run_engine_pair(model, params, readings, *, stride: int,
+                    head=None, reps: int = 12) -> dict:
+    """Fused and per-layer engines measured in *interleaved* passes: both
+    engines are built, warmed up and ring-filled up front (uncounted), then
+    timed steady-state passes alternate flavor, so a load transient on a
+    shared CI box taxes both equally (measuring them minutes apart lets
+    noise decide the comparison).  Returns {fused: (windows, wall_s, p99_s),
+    "ratio": r}: per flavor the best pass is kept (p99 from that same best
+    pass's verdict latencies, so latency rows stay comparable with the
+    pre-pair BENCH history), and ``ratio`` (fused windows/s over per-layer
+    windows/s) is the **median of per-rep paired ratios** — within a rep
+    the two passes run back to back, so a load transient scales both walls
+    and cancels out of the quotient; independent best-of-N would throw that
+    pairing away and let cross-rep load swings decide the comparison."""
     n_cycles, n_streams, _ = readings.shape
-    eng = StreamEngine(model, params, n_streams=n_streams, stride=stride,
-                       fused=fused)
-    eng.warmup()
-    # Ring fill is uncounted; steady-state passes are timed and the best
-    # kept (shared-core CI contention otherwise dominates the step time).
-    for c in range(min(spec.WINDOW, n_cycles)):
-        eng.ingest(readings[c % n_cycles])
-    best = None
-    for _ in range(2):
-        w0 = eng.stats.windows
-        t0 = time.perf_counter()
-        for c in range(n_cycles):
-            eng.ingest(readings[c])
-        wall = time.perf_counter() - t0
-        windows = eng.stats.windows - w0
-        if best is None or wall / max(windows, 1) < \
-                best[1] / max(best[0], 1):
-            best = (windows, wall)
-    return best[0], best[1], eng.stats.latency_p(99)
+    engines = {}
+    for fused in (False, True):
+        eng = StreamEngine(model, params, n_streams=n_streams, stride=stride,
+                           fused=fused, head=head)
+        eng.warmup()
+        for c in range(min(spec.WINDOW, n_cycles)):
+            eng.ingest(readings[c % n_cycles])
+        engines[fused] = eng
+    best = {False: None, True: None}
+    ratios = []
+    for rep in range(reps):
+        # Alternate which flavor goes first so any systematic first-in-rep
+        # effect (cache state, GC debt) cancels instead of biasing one side.
+        order = (False, True) if rep % 2 == 0 else (True, False)
+        walls = {}
+        for fused in order:
+            eng = engines[fused]
+            w0, l0 = eng.stats.windows, len(eng.stats.latencies_s)
+            t0 = time.perf_counter()
+            for c in range(n_cycles):
+                eng.ingest(readings[c])
+            wall = time.perf_counter() - t0
+            windows = eng.stats.windows - w0
+            walls[fused] = wall
+            lats = eng.stats.latencies_s[l0:]
+            if best[fused] is None or wall / max(windows, 1) < \
+                    best[fused][1] / max(best[fused][0], 1):
+                best[fused] = (windows, wall,
+                               float(np.percentile(lats, 99)) if lats
+                               else 0.0)
+        ratios.append(walls[False] / walls[True])   # = wps_f / wps_pl
+    best["ratio"] = float(np.median(ratios))
+    return best
 
 
-def run_naive(model, params, readings, *, stride: int) -> tuple:
-    """Per-stream float loop: np.roll ring + one jit apply per ready stream."""
+def run_naive(model, params, readings, *, stride: int,
+              reps: int = 12) -> tuple:
+    """Per-stream float loop: np.roll ring + one jit apply per ready stream.
+
+    Best of ``reps`` passes — the same sample count as ``run_engine_pair``'s
+    flavors, so vs_naive ratios don't reward the engine rows with a deeper
+    best-of draw than their denominator."""
     n_cycles, n_streams, n_feat = readings.shape
     window = spec.WINDOW
     apply1 = jax.jit(model.apply)
@@ -95,11 +140,11 @@ def run_naive(model, params, readings, *, stride: int) -> tuple:
     jax.block_until_ready(apply1(params, jnp.zeros((window * n_feat,))))
     rings = np.zeros((n_streams, window, n_feat), np.float32)
     count = 0
-    latencies = []
 
     def run_pass():
         nonlocal rings, count
         windows = 0
+        latencies = []
         t0 = time.perf_counter()
         for c in range(n_cycles):
             tc = time.perf_counter()
@@ -116,13 +161,14 @@ def run_naive(model, params, readings, *, stride: int) -> tuple:
                     jax.block_until_ready(o)
                 windows += n_streams
                 latencies.append(time.perf_counter() - tc)
-        return windows, time.perf_counter() - t0
+        return windows, time.perf_counter() - t0, latencies
 
-    # same steady-state best-of-2 discipline as run_engine
+    # same steady-state best-pass discipline as run_engine_pair: throughput
+    # AND p99 come from the single best pass, never pooled across reps.
     run_pass()
-    windows, wall = min((run_pass() for _ in range(2)),
-                        key=lambda r: r[1] / max(r[0], 1))
-    p99 = float(np.percentile(latencies, 99)) if latencies else 0.0
+    windows, wall, lats = min((run_pass() for _ in range(reps)),
+                              key=lambda r: r[1] / max(r[0], 1))
+    p99 = float(np.percentile(lats, 99)) if lats else 0.0
     return windows, wall, p99
 
 
@@ -136,21 +182,26 @@ def synthetic_readings(n_streams: int, n_cycles: int, seed: int) -> np.ndarray:
             .astype(np.float32) * np.asarray(spec.NORM_STD, np.float32))
 
 
-def shard_worker(n_devices: int, n_streams: int, n_cycles: int) -> None:
+def shard_worker(n_devices: int, n_streams: int, n_cycles: int,
+                 workload: str = "mlp") -> None:
     """One device-scaling measurement, run in a child process whose
     XLA_FLAGS fanned out ``n_devices`` host devices.  Prints a single
-    ``SHARD_ROW {json}`` line for the parent to collect."""
+    ``SHARD_ROW {json}`` line for the parent to collect.  ``workload``
+    picks the classifier (``mlp``) or the reconstruction autoencoder
+    (``ae`` — served through its head's on-device score reduction)."""
     from repro.launch.mesh import make_fleet_mesh
 
     if len(jax.devices()) < n_devices:
         raise RuntimeError(
             f"worker needs {n_devices} devices, sees {len(jax.devices())}")
-    model = build_detector()
+    model = build_autoencoder() if workload == "ae" else build_detector()
     params = model.init_params(jax.random.PRNGKey(0))
     calib = [jnp.asarray(np.random.default_rng(1).normal(size=spec.INPUT_SIZE)
                          .astype(np.float32)) for _ in range(8)]
     params = quantize.quantize_params(model, params, "SINT",
                                       calibration=calib)
+    head = (ReconstructionHead(threshold=BENCH_AE_THRESHOLD)
+            if workload == "ae" else None)
     readings = synthetic_readings(n_streams, n_cycles, seed=n_devices)
     # Timed as a full serve lifecycle — cold ring, fill cycles, verdicts —
     # because that's the deployment question the mesh answers: cycles of
@@ -160,7 +211,8 @@ def shard_worker(n_devices: int, n_streams: int, n_cycles: int) -> None:
     best = None
     for rep in range(2):
         eng = StreamEngine(model, params, n_streams=n_streams,
-                           stride=spec.STRIDE, mesh=make_fleet_mesh(n_devices))
+                           stride=spec.STRIDE, mesh=make_fleet_mesh(n_devices),
+                           head=head)
         eng.warmup()
         t0 = time.perf_counter()
         for c in range(n_cycles):
@@ -174,13 +226,17 @@ def shard_worker(n_devices: int, n_streams: int, n_cycles: int) -> None:
         "p99_s": best[2]}), flush=True)
 
 
-def run_scaling(quick: bool) -> list:
+def run_scaling(quick: bool, workload: str = "mlp") -> list:
     """Fan out one child per device count; return the scaling Rows."""
-    counts = (1, 2) if quick else (1, 2, 4, 8)
+    if workload == "ae":
+        counts = (1, 2) if quick else (1, 2, 4)
+    else:
+        counts = (1, 2) if quick else (1, 2, 4, 8)
     # Long enough that verdict steps dominate the lifecycle (the fill is
     # 200 of these cycles); scaling rows keep it fixed across --quick so
     # records stay comparable.
     n_cycles = 1200
+    prefix = "detect_ae_shard" if workload == "ae" else "detect_fleet_shard"
 
     def spawn(d):
         env = dict(os.environ)
@@ -189,7 +245,7 @@ def run_scaling(quick: bool) -> list:
             env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
                 f" --xla_force_host_platform_device_count={d}").strip()
         cmd = [sys.executable, os.path.abspath(__file__), "--shard-worker",
-               "--devices", str(d),
+               "--devices", str(d), "--workload", workload,
                "--streams", str(spec.STREAMS_PER_DEVICE * d),
                "--cycles", str(n_cycles)]
         out = subprocess.run(cmd, env=env, capture_output=True, text=True,
@@ -216,12 +272,12 @@ def run_scaling(quick: bool) -> list:
     for r in results:
         wps = r["windows"] / r["wall_s"]
         rows.append({
-            "name": f"detect_fleet_shard_d{r['devices']}",
+            "name": f"{prefix}_d{r['devices']}",
             "us_per_call": r["wall_s"] / max(r["windows"], 1) * 1e6,
             "derived": f"devices={r['devices']};streams={r['streams']};"
                        f"windows_s={wps:.0f};p99_ms={r['p99_s'] * 1e3:.2f};"
                        f"vs_1dev={wps / wps_1dev:.2f}x"})
-        print(f"# shard d{r['devices']}: {r['streams']} plants, "
+        print(f"# {workload} shard d{r['devices']}: {r['streams']} plants, "
               f"{wps:.0f} windows/s ({wps / wps_1dev:.2f}x vs 1 device)")
     return rows
 
@@ -255,32 +311,54 @@ def main(quick: bool = False, n_streams: int = 16, n_cycles: int = 0):
     for scheme in quantize.SCHEMES:
         variants.append((scheme, quantize.quantize_params(
             model, params, scheme, calibration=calib)))
+    def emit_pair_rows(prefix, pair, *, vs_naive=False):
+        """Append the perlayer+fused Row pair for one run_engine_pair result;
+        the fused row's vs_perlayer is the paired-median ratio.  Returns
+        (wps_perlayer, wps_fused)."""
+        wps = {}
+        for fused, suffix in ((False, "perlayer"), (True, "fused")):
+            w, wall, p99 = pair[fused]
+            wps[fused] = w / wall
+            derived = f"windows_s={wps[fused]:.0f};p99_ms={p99 * 1e3:.2f}"
+            if vs_naive:
+                derived += f";vs_naive={wps[fused] / wps_naive:.2f}x"
+            if fused:
+                derived += f";vs_perlayer={pair['ratio']:.2f}x"
+            rows.append({"name": f"{prefix}_{suffix}",
+                         "us_per_call": wall / max(w, 1) * 1e6,
+                         "derived": derived})
+        return wps[False], wps[True]
+
     speedup_sint = 0.0
     fused_vs_perlayer_sint = 0.0
     for scheme, p in variants:
-        w_pl, wall_pl, p99_pl = run_engine(model, p, readings, stride=stride,
-                                           fused=False)
-        wps_pl = w_pl / wall_pl
-        rows.append({"name": f"detect_engine_{scheme.lower()}_perlayer",
-                     "us_per_call": wall_pl / max(w_pl, 1) * 1e6,
-                     "derived": f"windows_s={wps_pl:.0f};"
-                                f"p99_ms={p99_pl * 1e3:.2f};"
-                                f"vs_naive={wps_pl / wps_naive:.2f}x"})
-        w_f, wall_f, p99_f = run_engine(model, p, readings, stride=stride,
-                                        fused=True)
-        wps_f = w_f / wall_f
-        fused_gain = wps_f / wps_pl
+        pair = run_engine_pair(model, p, readings, stride=stride)
+        _, wps_f = emit_pair_rows(f"detect_engine_{scheme.lower()}", pair,
+                                  vs_naive=True)
         if scheme == "SINT":
             speedup_sint = wps_f / wps_naive
-            fused_vs_perlayer_sint = fused_gain
-        rows.append({"name": f"detect_engine_{scheme.lower()}_fused",
-                     "us_per_call": wall_f / max(w_f, 1) * 1e6,
-                     "derived": f"windows_s={wps_f:.0f};"
-                                f"p99_ms={p99_f * 1e3:.2f};"
-                                f"vs_naive={wps_f / wps_naive:.2f}x;"
-                                f"vs_perlayer={fused_gain:.2f}x"})
+            fused_vs_perlayer_sint = pair["ratio"]
+    # Autoencoder workload (detect_ae_* rows): the 400-64-16-64-400
+    # reconstruction detector through the same engine, verdicts via its
+    # ReconstructionHead — the (S, 400) decode reduced to an (S, 1) score
+    # on device.  fused-vs-per-layer at REAL+SINT; --quick keeps SINT so
+    # the CI artifact always carries the fused autoencoder row.
+    ae_model = build_autoencoder()
+    ae_params = ae_model.init_params(jax.random.PRNGKey(2))
+    ae_head = ReconstructionHead(threshold=BENCH_AE_THRESHOLD)
+    ae_variants = [] if quick else [("REAL", ae_params)]
+    ae_variants.append(("SINT", quantize.quantize_params(
+        ae_model, ae_params, "SINT", calibration=calib)))
+    for scheme, p in ae_variants:
+        pair = run_engine_pair(ae_model, p, readings, stride=stride,
+                               head=ae_head)
+        wps_pl, wps_f = emit_pair_rows(f"detect_ae_{scheme.lower()}", pair)
+        print(f"# ae {scheme}: fused {wps_f:.0f} vs per-layer {wps_pl:.0f} "
+              f"windows/s (paired ratio {pair['ratio']:.2f}x)")
+
     print(f"# device scaling ({spec.STREAMS_PER_DEVICE} plants/device)")
     rows.extend(run_scaling(quick))
+    rows.extend(run_scaling(quick, workload="ae"))
 
     emit(rows)
     print(f"# fused SINT vs naive float: {speedup_sint:.2f}x windows/s; "
@@ -297,8 +375,10 @@ if __name__ == "__main__":
                     help="internal: one device-scaling measurement "
                          "(spawned by run_scaling with XLA_FLAGS set)")
     ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--workload", default="mlp", choices=("mlp", "ae"),
+                    help="internal: shard-worker model kind")
     a = ap.parse_args()
     if a.shard_worker:
-        shard_worker(a.devices, a.streams, a.cycles)
+        shard_worker(a.devices, a.streams, a.cycles, a.workload)
     else:
         main(quick=a.quick, n_streams=a.streams, n_cycles=a.cycles)

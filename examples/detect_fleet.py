@@ -1,11 +1,20 @@
 """Fleet-scale anomaly detection over the MSF scenario library.
 
-Trains the §7 detector (established-framework stage), ports it to the ICSML
+Trains a detector (established-framework stage), ports it to the ICSML
 core (§4.3), optionally quantizes it (§6.1), then serves a heterogeneous
 fleet of simulated plants — each running a named scenario from
 ``repro.sim.scenarios`` — through the batched ``StreamEngine``: per-stream
 ring-buffer windows, one jitted donated detector step per verdict cadence,
 per-window latency/deadline accounting.
+
+``--detector`` picks the workload: ``mlp`` is the paper's supervised
+400-64-32-16-2 classifier; ``ae`` is the unsupervised 400-64-16-64-400
+autoencoder — trained on benign windows only, anomaly score = per-window
+reconstruction error, verdict threshold calibrated to
+``spec.AE_TARGET_FPR`` false positives on held-out normal traces (and
+re-calibrated on the quantized model when ``--quant`` is not REAL, so the
+served scores match the served arithmetic).  Both serve through the same
+fused single-dispatch detector step.
 
 With ``--devices N`` the engine shards the fleet's stream axis over an
 N-device ``("data",)`` mesh — on a CPU host the devices are fanned out via
@@ -24,8 +33,6 @@ import collections
 import os
 import sys
 import tempfile
-
-import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -46,18 +53,17 @@ def _fan_out_devices() -> int:
 
 _fan_out_devices()
 
-import jax.numpy as jnp
-
 from repro.configs import msf_detector as spec
 from repro.core import porting, quantize
 from repro.launch.mesh import make_fleet_mesh
 from repro.sim import (SCENARIOS, build_dataset, build_fleet, get_scenario,
-                       scenario_table, train_detector)
+                       recalibrate_threshold, scenario_table,
+                       train_autoencoder, train_detector)
 from repro.sim.msf import SCAN_DT
 from repro.serving import StreamEngine
 
 
-def train_and_port(fast: bool, quant: str):
+def train_and_port(fast: bool, quant: str, detector: str):
     scale = 0.2 if fast else 0.5
     print("== dataset + training (established-framework stage) ==")
     # jittered normal plants in training: the fleet is heterogeneous, and
@@ -65,18 +71,35 @@ def train_and_port(fast: bool, quant: str):
     x, y = build_dataset(normal_cycles=int(42_000 * scale),
                          attack_cycles=int(5_700 * scale), stride=8, seed=0,
                          jitter=0.015, jitter_plants=4)
-    model, res = train_detector(x, y, epochs=30 if fast else 60,
-                                patience=8, lr=1e-3)
-    print(f"val acc {res.best_val_acc:.4f}  test acc {res.test_acc:.4f}")
+    head = None
+    if detector == "ae":
+        model, res = train_autoencoder(x, y, epochs=30 if fast else 60,
+                                       patience=8, lr=1e-3)
+        head = res.head
+        print(f"val mse {res.best_val_mse:.6f}  threshold {res.threshold:.6f}"
+              f"  calib FPR {res.calib_fpr:.4f}"
+              f"  attack-window detection {res.test_detection_rate:.4f}")
+    else:
+        model, res = train_detector(x, y, epochs=30 if fast else 60,
+                                    patience=8, lr=1e-3)
+        print(f"val acc {res.best_val_acc:.4f}  test acc {res.test_acc:.4f}")
     print("== porting to ICSML (§4.3) ==")
     with tempfile.TemporaryDirectory() as tmp:
         model, params = porting.port_mlp(model, res.params, tmp)
     if quant != "REAL":
         print(f"== quantizing to {quant} (§6.1) ==")
-        calib = [jnp.asarray(x[i]) for i in range(0, 256, 8)]
+        # Activation scales from benign-trace ranges (quantize.py docstring:
+        # weight absmax alone leaves the AE decoder's scales wildly off).
+        calib = quantize.calibration_samples(x, y)
         params = quantize.quantize_params(model, params, quant,
                                           calibration=calib)
-    return model, params
+        if head is not None:
+            # Re-calibrate the verdict threshold against the *quantized*
+            # model's scores — on the same held-out normal windows the REAL
+            # threshold came from (recalibrate_threshold owns that invariant).
+            head, _ = recalibrate_threshold(model, params, res.calib_windows)
+            print(f"re-calibrated {quant} threshold {head.threshold:.6f}")
+    return model, params, head
 
 
 def main():
@@ -87,6 +110,9 @@ def main():
     ap.add_argument("--cycles", type=int, default=1600)
     ap.add_argument("--quant", default="SINT",
                     choices=("REAL",) + quantize.SCHEMES)
+    ap.add_argument("--detector", default="mlp", choices=("mlp", "ae"),
+                    help="mlp: supervised §7 classifier; ae: unsupervised "
+                         "reconstruction-error autoencoder")
     ap.add_argument("--jitter", type=float, default=None,
                     help="override per-scenario plant jitter")
     ap.add_argument("--seed", type=int, default=0)
@@ -107,19 +133,19 @@ def main():
     for n in names:
         get_scenario(n)   # fail fast on typos
 
-    model, params = train_and_port(args.fast, args.quant)
+    model, params, head = train_and_port(args.fast, args.quant, args.detector)
 
     mesh = make_fleet_mesh(args.devices) if args.devices > 1 else None
     shard_note = (f", sharded over {args.devices} devices "
                   f"({-(-args.plants // args.devices)} streams/device)"
                   if mesh is not None else "")
     print(f"== serving {args.plants} plants x {args.cycles} cycles "
-          f"({args.quant}{shard_note}) ==")
+          f"({args.detector}/{args.quant}{shard_note}) ==")
     fleet = build_fleet(names, args.plants, seed=args.seed + 1000,
                         jitter=args.jitter)
     # --devices 1 pins sharding OFF even in a multi-device process, so the
     # flag always means what the serve header prints.
-    engine = StreamEngine(model, params, n_streams=args.plants,
+    engine = StreamEngine(model, params, n_streams=args.plants, head=head,
                           **({"mesh": mesh} if mesh is not None
                              else {"shard": False}))
     engine.warmup()

@@ -1,11 +1,19 @@
-"""The §7 case-study model: densely connected classifier with 400 inputs
-(2 features x 10 readings/s x 20 s) and 4 hidden ReLU layers — plus the
+"""The §7 case-study detector workloads: the paper's densely connected
+classifier (400 inputs = 2 features x 10 readings/s x 20 s, hidden ReLU
+layers, 2-class head) plus the unsupervised autoencoder variant — and the
 serving-side constants for the fleet detection service
 (`repro.serving.streams.StreamEngine` / `examples/detect_fleet.py`)."""
 
 INPUT_SIZE = 400
 HIDDEN = (64, 32, 16)
 CLASSES = 2
+
+# Unsupervised reconstruction detector: 400-64-16-64-400 autoencoder trained
+# on benign windows only (MSE), anomaly score = per-window reconstruction
+# error.  The verdict threshold is calibrated to AE_TARGET_FPR false
+# positives on held-out normal traces (sim.detector.train_autoencoder).
+AE_HIDDEN = (64, 16, 64)
+AE_TARGET_FPR = 0.01
 WINDOW_SECONDS = 20
 READINGS_PER_SECOND = 10
 N_FEATURES = 2

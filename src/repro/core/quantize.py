@@ -22,7 +22,7 @@ targeting the MXU int8 path; the jnp path here doubles as its oracle.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +89,30 @@ def calibrate_activation_scales(
         uid: (jnp.maximum(m, 1e-12) / qmax).astype(jnp.float32)
         for uid, m in absmax.items()
     }
+
+
+def calibration_samples(
+    x, labels=None, *, k: int = 32
+) -> List[jax.Array]:
+    """Representative-input samples for :func:`calibrate_activation_scales`,
+    drawn evenly from the *benign* rows of a dataset.
+
+    Activation scales must come from the activation ranges the layer will
+    actually see: the autoencoder's decoder output layer reproduces the
+    ±several-sigma normalized window, and its 64-wide input activations
+    range far outside the ``[-1, 1]`` the uncalibrated default
+    (``x_scale = 1/qmax``) assumes — weight-absmax scales alone leave SINT
+    reconstruction error orders of magnitude off REAL.  Benign windows are
+    exactly what the detector serves pre-onset, so they bound the scales the
+    §6.1 arithmetic runs under (``labels`` drops attack windows when given).
+    """
+    x = np.asarray(x)
+    if labels is not None:
+        x = x[np.asarray(labels) == 0]
+    if len(x) == 0:
+        raise ValueError("no benign rows to calibrate on")
+    idx = np.linspace(0, len(x) - 1, min(k, len(x))).astype(int)
+    return [jnp.asarray(x[i]) for i in idx]
 
 
 def quantize_params(

@@ -1,11 +1,11 @@
-"""Pallas TPU kernel: the whole detector MLP fused into ONE dispatch.
+"""Pallas TPU kernel: a whole Dense-stack MLP fused into ONE dispatch.
 
 The paper's §6 domain-specific optimizations (loop unrolling, fused quantized
 arithmetic) exist because per-layer dispatch overhead dominates small-MLP
 inference on constrained hardware.  The TPU port had the same pathology: each
 fleet verdict step issued one ``qmatmul``/matmul dispatch per Dense layer with
-inter-layer HBM round-trips, for a 400-64-32-16-2 network whose *entire*
-weight set (f32: ~110 KB, SINT: ~28 KB) fits in a sliver of one VMEM tile.
+inter-layer HBM round-trips, for detector-sized networks whose weights fit in
+a sliver of one VMEM tile.
 
 This kernel executes **all** Dense layers in a single ``pallas_call``:
 
@@ -26,12 +26,23 @@ Layer kinds (mirroring ``layers._quantized_matvec`` / §6.1 semantics):
   (INT/DINT)          emulated in f32 (no int16/int32 MXU mode — DESIGN.md §2),
                       rescale+bias.
 
-Grid: (M/block_m,) — M is the only dimension worth tiling; all K/N dims of
-the detector are single 128-lane tiles after padding.  Padding contract (the
-``ops.fused_forward`` wrapper maintains it): weights are zero-padded, scales
-and biases zero-padded, so padded output lanes carry ``act(0)`` garbage that
-the *zero-padded rows* of the next layer's weights annihilate — correctness
-never depends on masking inside the kernel.
+Grid: ``(M/block_m, K0/block_k)`` — rows tile as before, and the **first
+layer is K-gridded**: its input width (the detector's 400-wide window — the
+widest dimension of both §7 workloads) streams through VMEM one
+``(block_m, block_k)`` x-tile and ``(block_k, N1)`` weight slab at a time,
+accumulating into a VMEM scratch (int32 for an int8 first layer — split-K
+integer accumulation is exact — f32 otherwise).  The last K step runs the
+dequant/bias/activation epilogue and every remaining layer back to back in
+VMEM.  This lifts the old whole-net-in-VMEM restriction to a *widest-layer*
+budget: the VMEM bill charges layer 0 one K-slab (not its full K extent)
+plus every later layer in full, so wide-input stacks — and the autoencoder's
+400-wide decoder output — fuse as long as each resident layer fits.
+
+Padding contract (the ``ops.fused_forward`` wrapper maintains it): weights
+are zero-padded, scales and biases zero-padded, so padded output lanes carry
+``act(0)`` garbage that the *zero-padded rows* of the next layer's weights
+annihilate — correctness never depends on masking inside the kernel.  K
+padding of layer 0 is likewise zero x-lanes times zero weight rows.
 """
 
 from __future__ import annotations
@@ -53,11 +64,17 @@ from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 # zero-padded weight rows).
 FUSED_ACTIVATIONS = frozenset(ACTIVATIONS) - {"softmax"}
 
-# VMEM is ~16 MB/core; weights + one activation tile per layer must fit since
-# the whole point is never spilling to HBM between layers.  ops.can_fuse
-# applies the same budget so auto-selection falls back to the per-layer path
-# for oversized stacks instead of failing at dispatch time.
+# VMEM is ~16 MB/core; the *resident set* — one K-slab of the first layer,
+# every later layer in full, one activation tile per layer, the split-K
+# scratch — must fit, since the whole point is never spilling to HBM between
+# layers.  ops.can_fuse applies the same budget so auto-selection falls back
+# to the per-layer path for oversized stacks instead of failing at dispatch.
 VMEM_BUDGET_BYTES = 12 * 2**20
+
+# Default K tile of the first layer: one 512-lane slab covers both detector
+# workloads' padded 400-wide input in a single K step (nk=1 — bit-identical
+# to un-split accumulation) while capping the resident slab for wider inputs.
+DEFAULT_BLOCK_K = 512
 
 
 class FusedLayer(NamedTuple):
@@ -91,45 +108,116 @@ def _layer_mode(dtype) -> str:
     raise ValueError(f"unsupported fused-layer weight dtype {dtype}")
 
 
+def fused_vmem_bytes(
+    layer_shapes: Sequence[tuple],
+    *,
+    block_m: int = 128,
+    block_k: Optional[int] = None,
+) -> int:
+    """The kernel's VMEM resident-set estimate for a padded stack.
+
+    ``layer_shapes`` is ``[(K, N, itemsize), ...]``; layer 0 is charged one
+    ``block_k`` K-slab (the K grid streams the rest), later layers their full
+    extent, plus per-layer activation tiles, 8 B/lane of scale+bias, and the
+    split-K accumulator scratch.  ``ops.can_fuse`` and :func:`fused_mlp`
+    share this accounting so auto-selection and dispatch agree.
+    """
+    k0 = layer_shapes[0][0]
+    bk = min(block_k or DEFAULT_BLOCK_K, k0)
+    total = block_m * layer_shapes[0][1] * 4        # split-K scratch
+    for i, (k, n, itemsize) in enumerate(layer_shapes):
+        k_res = bk if i == 0 else k
+        total += k_res * n * itemsize + 8 * n
+        # Activation tiles: max(k_res, n) covers both the layer's input tile
+        # (the x slab for layer 0) and its output tile at the 4 B f32 width.
+        total += block_m * max(k_res, n) * 4
+    return total
+
+
 def _fused_kernel(*refs, modes: Sequence[str], acts: Sequence[str],
-                  qmaxes: Sequence[int]):
-    """One grid step: a (block_m, K0) row tile through every layer in VMEM."""
-    x_ref, out_ref = refs[0], refs[-1]
-    h = x_ref[...]
+                  qmaxes: Sequence[int], nk: int):
+    """One grid step: accumulate layer 0 over a K slab; on the last K step,
+    run its epilogue and every remaining layer in VMEM."""
+    x_ref, out_ref, acc_ref = refs[0], refs[-2], refs[-1]
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # -- first layer: partial product over this (block_m, block_k) tile.
     idx = 1
-    for mode, act, qmax in zip(modes, acts, qmaxes):
-        if mode == "real":
-            w_ref, b_ref = refs[idx], refs[idx + 1]
-            idx += 2
-            h = jax.lax.dot_general(
-                h, w_ref[...], (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            ) + b_ref[...]
+    if modes[0] == "real":
+        w0_ref, b0_ref = refs[idx], refs[idx + 1]
+        idx += 2
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], w0_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+        def _finish0(acc):
+            return acc + b0_ref[...]
+    else:
+        xs0_ref, w0_ref, s0_ref, b0_ref = refs[idx:idx + 4]
+        idx += 4
+        # In-kernel (re)quantization is element-wise, so quantizing one K
+        # slab at a time is identical to quantizing the whole row.
+        hq = jnp.clip(jnp.round(x_ref[...] / xs0_ref[0, 0]),
+                      -qmaxes[0], qmaxes[0])
+        if modes[0] == "int8":
+            # int32 scratch: split-K integer accumulation is exact, so the
+            # K grid cannot perturb SINT numerics.
+            acc_ref[...] += jax.lax.dot_general(
+                hq.astype(jnp.int8), w0_ref[...], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
         else:
-            xs_ref, w_ref, s_ref, b_ref = refs[idx:idx + 4]
-            idx += 4
-            xs = xs_ref[0, 0]
-            # In-kernel (re)quantization: N float mults + round + symmetric
-            # clip — the §6.1 activation-quantization step, fused so the f32
-            # activations never leave VMEM between layers.
-            hq = jnp.clip(jnp.round(h / xs), -qmax, qmax)
-            if mode == "int8":
-                acc = jax.lax.dot_general(
-                    hq.astype(jnp.int8), w_ref[...],
-                    (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.int32,
-                ).astype(jnp.float32)
+            acc_ref[...] += jax.lax.dot_general(
+                hq, w0_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            )
+
+        def _finish0(acc):
+            return acc.astype(jnp.float32) * s0_ref[...] + b0_ref[...]
+
+    rest = refs[idx:-2]
+
+    @pl.when(j == nk - 1)
+    def _epilogue():
+        h = ACTIVATIONS[acts[0]](_finish0(acc_ref[...]).astype(jnp.float32))
+        i = 0
+        for mode, act, qmax in zip(modes[1:], acts[1:], qmaxes[1:]):
+            if mode == "real":
+                w_ref, b_ref = rest[i], rest[i + 1]
+                i += 2
+                h = jax.lax.dot_general(
+                    h, w_ref[...], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                ) + b_ref[...]
             else:
-                # INT/DINT: integer grid, f32 arithmetic (emulated — the MXU
-                # has no int16/int32 mode and int32 accumulation overflows).
-                acc = jax.lax.dot_general(
-                    hq, w_ref[...].astype(jnp.float32),
-                    (((1,), (0,)), ((), ())),
-                )
-            # Fused dequant epilogue: REAL rescale + bias, still in VMEM.
-            h = acc * s_ref[...] + b_ref[...]
-        h = ACTIVATIONS[act](h)
-    out_ref[...] = h
+                xs_ref, w_ref, s_ref, b_ref = rest[i:i + 4]
+                i += 4
+                xs = xs_ref[0, 0]
+                # In-kernel requantization: the §6.1 activation-quantization
+                # step, fused so f32 activations never leave VMEM.
+                hq = jnp.clip(jnp.round(h / xs), -qmax, qmax)
+                if mode == "int8":
+                    acc = jax.lax.dot_general(
+                        hq.astype(jnp.int8), w_ref[...],
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.int32,
+                    ).astype(jnp.float32)
+                else:
+                    # INT/DINT: integer grid, f32 arithmetic (emulated — the
+                    # MXU has no int16/int32 mode and int32 accumulation
+                    # overflows).
+                    acc = jax.lax.dot_general(
+                        hq, w_ref[...].astype(jnp.float32),
+                        (((1,), (0,)), ((), ())),
+                    )
+                # Fused dequant epilogue: REAL rescale + bias, still in VMEM.
+                h = acc * s_ref[...] + b_ref[...]
+            h = ACTIVATIONS[act](h)
+        out_ref[...] = h
 
 
 def fused_mlp(
@@ -137,6 +225,7 @@ def fused_mlp(
     layers: Sequence[FusedLayer],
     *,
     block_m: int = 128,
+    block_k: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Run a whole Dense stack as ONE Pallas dispatch.
@@ -146,7 +235,11 @@ def fused_mlp(
         layer dim already padded to the 128-lane tile.
       layers: padded :class:`FusedLayer` specs; layer i's ``w.shape[0]`` must
         equal layer i-1's ``w.shape[1]`` (and ``x.shape[1]`` for layer 0).
-      block_m: row tile; the only gridded dimension.
+      block_m: row tile.
+      block_k: K tile of the *first* layer (default ``DEFAULT_BLOCK_K``,
+        clamped to K0); K0 must divide by it.  One K step (nk=1) is
+        bit-identical to the un-split kernel; more steps stream the first
+        layer's weights through VMEM one slab at a time.
       interpret: run the kernel body in Python (CPU validation mode).
 
     Returns (M, N_last) f32 logits (padded lanes included — callers slice).
@@ -156,8 +249,12 @@ def fused_mlp(
     m, k0 = x.shape
     assert m % block_m == 0, (m, block_m)
     assert k0 % 128 == 0, x.shape
+    block_k = min(block_k or DEFAULT_BLOCK_K, k0)
+    assert block_k % 128 == 0, block_k
+    assert k0 % block_k == 0, (k0, block_k)
+    nk = k0 // block_k
     prev_n = k0
-    vmem_bytes = 0
+    shapes = []
     for i, layer in enumerate(layers):
         k, n = layer.w.shape
         assert k == prev_n, f"layer {i}: K {k} != previous width {prev_n}"
@@ -170,14 +267,15 @@ def fused_mlp(
             raise ValueError(
                 f"activation {layer.act!r} is not fusable (padded lanes); "
                 f"pick from {sorted(FUSED_ACTIVATIONS)}")
-        vmem_bytes += layer.w.size * layer.w.dtype.itemsize + 8 * n
-        vmem_bytes += block_m * max(k, n) * 4
+        shapes.append((k, n, layer.w.dtype.itemsize))
         prev_n = n
+    vmem_bytes = fused_vmem_bytes(shapes, block_m=block_m, block_k=block_k)
     if vmem_bytes > VMEM_BUDGET_BYTES:
         raise ValueError(
-            f"fused stack needs ~{vmem_bytes} B of VMEM (> "
-            f"{VMEM_BUDGET_BYTES}); this kernel is for whole-net-in-VMEM "
-            "MLPs — fall back to the per-layer path")
+            f"fused stack needs ~{vmem_bytes} B of VMEM resident (> "
+            f"{VMEM_BUDGET_BYTES}); the K grid already streams the first "
+            "layer, so a later layer is too wide to keep in VMEM — fall "
+            "back to the per-layer path")
 
     modes = tuple(_layer_mode(layer.w.dtype) for layer in layers)
     acts = tuple(layer.act for layer in layers)
@@ -186,32 +284,40 @@ def fused_mlp(
         for layer in layers
     )
 
+    n1 = layers[0].w.shape[1]
+    acc_dtype = jnp.int32 if modes[0] == "int8" else jnp.float32
+
     operands = [x]
-    in_specs = [pl.BlockSpec((block_m, k0), lambda i: (i, 0))]
-    for layer in layers:
+    in_specs = [pl.BlockSpec((block_m, block_k), lambda i, j: (i, j))]
+    for li, layer in enumerate(layers):
         k, n = layer.w.shape
         if layer.quantized:
             operands.append(layer.x_scale)
-            in_specs.append(pl.BlockSpec((1, 1), lambda i: (0, 0),
+            in_specs.append(pl.BlockSpec((1, 1), lambda i, j: (0, 0),
                                          memory_space=pltpu.SMEM))
         operands.append(layer.w)
-        in_specs.append(pl.BlockSpec((k, n), lambda i: (0, 0)))
+        if li == 0:
+            # The only K-gridded operand: one (block_k, N1) slab per K step.
+            in_specs.append(pl.BlockSpec((block_k, n), lambda i, j: (j, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((k, n), lambda i, j: (0, 0)))
         if layer.quantized:
             operands.append(layer.scale)
-            in_specs.append(pl.BlockSpec((1, n), lambda i: (0, 0)))
+            in_specs.append(pl.BlockSpec((1, n), lambda i, j: (0, 0)))
         operands.append(layer.bias)
-        in_specs.append(pl.BlockSpec((1, n), lambda i: (0, 0)))
+        in_specs.append(pl.BlockSpec((1, n), lambda i, j: (0, 0)))
 
     n_last = layers[-1].w.shape[1]
     return pl.pallas_call(
         functools.partial(_fused_kernel, modes=modes, acts=acts,
-                          qmaxes=qmaxes),
-        grid=(m // block_m,),
+                          qmaxes=qmaxes, nk=nk),
+        grid=(m // block_m, nk),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((block_m, n_last), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block_m, n_last), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, n_last), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, n1), acc_dtype)],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel",),
+            dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(*operands)

@@ -17,9 +17,9 @@ import jax.numpy as jnp
 
 from repro.core.layers import Dense, Input
 from repro.core.prune import BlockSparseWeight
+from repro.kernels import fused_mlp as _fused_mod
 from repro.kernels import ref
 from repro.kernels.fused_mlp import (FUSED_ACTIVATIONS, FusedLayer,
-                                     VMEM_BUDGET_BYTES,
                                      fused_mlp as _fused_pallas)
 from repro.kernels.qmatmul import qmatmul as _qmatmul_pallas
 from repro.kernels.sparse_matmul import sparse_matmul as _sparse_pallas
@@ -110,34 +110,51 @@ def model_fusable(model, stack: LayerStack) -> bool:
             and can_fuse(stack))
 
 
-def can_fuse(stack: LayerStack) -> bool:
+def _padded_shapes(stack: LayerStack,
+                   block_k: Optional[int]) -> Tuple[list, int]:
+    """((Kp, Np, itemsize) per layer, effective block_k) after the wrapper's
+    padding: every dim to the 128-lane tile, and layer 0's K additionally to
+    a ``block_k`` multiple (the K grid needs whole slabs; the extra K lanes
+    are zero activations times zero weight rows)."""
+    pad128 = lambda v: -(-v // 128) * 128
+    k0 = pad128(stack[0][0]["qw" if "qw" in stack[0][0] else "w"].shape[0])
+    bk = pad128(min(block_k or _fused_mod.DEFAULT_BLOCK_K, k0))
+    shapes = []
+    for i, (p, _) in enumerate(stack):
+        w = p["qw"] if "qw" in p else p["w"]
+        kp, np_ = pad128(w.shape[0]), pad128(w.shape[1])
+        if i == 0:
+            kp = -(-kp // bk) * bk
+        shapes.append((kp, np_, w.dtype.itemsize))
+    return shapes, bk
+
+
+def can_fuse(stack: LayerStack, *, block_k: Optional[int] = None) -> bool:
     """True when a layer stack can run as one fused Pallas dispatch.
 
     Requires every layer to be a plain or §6.1-quantized Dense param dict
-    (``w``/``qw``) with a pad-safe (element-wise) activation, and the whole
-    padded stack to fit the kernel's VMEM budget — oversized stacks fall
-    back to the per-layer path instead of failing at dispatch time.
+    (``w``/``qw``) with a pad-safe (element-wise) activation, and the
+    stack's VMEM *resident set* to fit the kernel budget.  The first layer
+    is K-gridded, so only one ``block_k`` slab of it is charged — a wide
+    input (or a wide autoencoder decoder output) no longer disqualifies
+    fusion; each *later* layer must still fit in full (widest-layer check).
+    Oversized stacks fall back to the per-layer path instead of failing at
+    dispatch time.
     """
     if not stack:
         return False
-    pad128 = lambda v: -(-v // 128) * 128
-    vmem_bytes = 0
     for p, act in stack:
         if act not in FUSED_ACTIVATIONS:
             return False
         if "qw" in p:
             if p["qw"].ndim != 2 or "w_scale" not in p or "x_scale" not in p:
                 return False
-            w = p["qw"]
         elif "w" not in p or p["w"].ndim != 2:
             return False
-        else:
-            w = p["w"]
-        # Mirror fused_mlp's estimate at the worst-case 128-row tile.
-        kp, np_ = pad128(w.shape[0]), pad128(w.shape[1])
-        vmem_bytes += kp * np_ * w.dtype.itemsize + 8 * np_
-        vmem_bytes += 128 * max(kp, np_) * 4
-    return vmem_bytes <= VMEM_BUDGET_BYTES
+    shapes, bk = _padded_shapes(stack, block_k)
+    # Mirror fused_mlp's estimate at the worst-case 128-row tile.
+    return _fused_mod.fused_vmem_bytes(
+        shapes, block_m=128, block_k=bk) <= _fused_mod.VMEM_BUDGET_BYTES
 
 
 def _fused_layer(p: Dict[str, jax.Array], act: str, block: int) -> FusedLayer:
@@ -170,6 +187,7 @@ def fused_forward(
     *,
     backend: str = "auto",
     block: int = 128,
+    block_k: Optional[int] = None,
 ) -> jax.Array:
     """Whole Dense stack in ONE dispatch: ``x -> logits`` (M, N_last).
 
@@ -178,12 +196,16 @@ def fused_forward(
     §6.1-quantized (``qw``/``w_scale``/``x_scale``) per layer.  All weights
     are staged into VMEM once and activations never round-trip to HBM
     between layers; SINT layers requantize in-kernel (int8 MXU layer to
-    layer).
+    layer).  The first layer is K-gridded (``block_k``, default
+    ``fused_mlp.DEFAULT_BLOCK_K``): wide inputs stream through VMEM one
+    slab per grid step, and inputs not divisible by the slab are zero-padded
+    up to it (annihilated by zero weight rows — same contract as the lane
+    padding).
 
     backend: 'auto' (pallas on TPU else oracle), 'pallas' (interpret
     off-TPU), 'ref'.
     """
-    if not can_fuse(stack):
+    if not can_fuse(stack, block_k=block_k):
         raise ValueError("layer stack is not fusable; see ops.can_fuse")
     if backend == "ref" or (backend == "auto" and not _on_tpu()):
         return ref.fused_mlp_ref(x, stack)
@@ -196,9 +218,13 @@ def fused_forward(
     granule = 32 if any(
         "qw" in p and p["qw"].dtype == jnp.int8 for p, _ in stack) else 8
     block_m = min(block, max(granule, -(-m // granule) * granule))
-    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, block_m), 1, block)
     layers = [_fused_layer(p, act, block) for p, act in stack]
-    out = _fused_pallas(xp, layers, block_m=block_m,
+    shapes, bk = _padded_shapes(stack, block_k)
+    kp = shapes[0][0]       # layer-0 K after lane + K-slab padding
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, block_m), 1, kp)
+    if layers[0].w.shape[0] != kp:
+        layers[0] = layers[0]._replace(w=_pad_to(layers[0].w, 0, kp))
+    out = _fused_pallas(xp, layers, block_m=block_m, block_k=bk,
                         interpret=not _on_tpu())
     return out[:m, :n_out]
 

@@ -9,6 +9,16 @@ detector step** — ring-buffer scatter write, modular window unroll, and the
 batched MLP forward fused into a single XLA computation, with the ring arena
 donated across steps (the ICSML dataMem discipline).
 
+**Detector heads.** What a verdict *is* comes from a
+:class:`repro.sim.heads.DetectorHead`: the default :class:`ClassifierHead`
+reproduces the §7 classifier (argmax class + softmax probability), while a
+calibrated :class:`ReconstructionHead` serves the unsupervised autoencoder
+workload — its device epilogue reduces the (S, 400) reconstructions to an
+(S, 1) anomaly score *inside* the jitted step (sharded and unsharded), so
+the host receives one float per stream and compares it against the
+FPR-calibrated threshold.  Heads are row-local, so they compose with fleet
+sharding without new collectives.
+
 Quantized serving (§6.1) runs the same step with SINT/INT/DINT params from
 ``repro.core.quantize``: SINT (int8) layers go through the Pallas
 ``qmatmul`` int8 MXU path via ``repro.kernels.ops.quantized_matmul``
@@ -59,18 +69,28 @@ from repro.core.layers import ACTIVATIONS
 from repro.core.model import Model, ParamTree
 from repro.kernels import ops
 from repro.launch.mesh import make_fleet_mesh
+from repro.sim.heads import ClassifierHead, DetectorHead
 
 
 @dataclasses.dataclass
 class Verdict:
-    """One per-stream classification of a completed window."""
+    """One per-stream verdict on a completed window.
+
+    The payload depends on the engine's :class:`~repro.sim.heads.DetectorHead`:
+    a classifier head fills ``pred``/``prob`` (argmax class + its softmax
+    probability, ``score``/``threshold`` None); a reconstruction head fills
+    ``pred``/``score``/``threshold`` (pred = score over threshold, ``prob``
+    None).  ``pred != 0`` always means "anomalous".
+    """
 
     stream: int               # stream index in the fleet
     cycle: int                # scan cycle at which the window completed
-    pred: int                 # argmax class (0 = normal)
-    prob: float               # softmax probability of the predicted class
+    pred: int                 # verdict class (0 = normal)
+    prob: Optional[float]     # classifier: softmax prob of the predicted class
     latency_s: float          # window-completion -> verdict-on-host wall time
     deadline_miss: bool       # latency_s > deadline_s
+    score: Optional[float] = None       # reconstruction: anomaly score
+    threshold: Optional[float] = None   # reconstruction: calibrated cutoff
 
 
 @dataclasses.dataclass
@@ -151,6 +171,12 @@ class StreamEngine:
     qmatmul/matmul dispatch per layer); ``fused=True`` raises if the model
     cannot fuse.
 
+    ``head`` selects the verdict semantics (module docstring): default
+    :class:`~repro.sim.heads.ClassifierHead`; pass a calibrated
+    :class:`~repro.sim.heads.ReconstructionHead` to serve an autoencoder
+    (``last_logits`` then holds the per-stream anomaly scores, shape
+    ``(n_streams, 1)``).
+
     ``shard``/``mesh`` control stream-axis fleet sharding (module docstring):
     ``shard=None`` auto-enables it when the process has more than one device,
     ``shard=True`` forces it (a 1-device mesh still runs the shard_map path),
@@ -170,6 +196,7 @@ class StreamEngine:
                  norm_std: Sequence[float] = spec.NORM_STD,
                  backend: str = "auto",
                  fused: Optional[bool] = None,
+                 head: Optional[DetectorHead] = None,
                  shard: Optional[bool] = None,
                  mesh: Optional[Mesh] = None):
         (input_size,) = model.input_shape
@@ -193,6 +220,18 @@ class StreamEngine:
             raise ValueError("norm_mean/norm_std must have one entry per feature")
         self._stack = _layer_stack(model, params)
         self._backend = backend
+        # Verdict-head routing: the head's device epilogue is traced into the
+        # jitted step below (sharded and unsharded) and its host epilogue
+        # turns step outputs into Verdict fields — the engine itself no
+        # longer assumes a softmax/argmax classifier.  Constructor-only knob
+        # (like ``fused``): both paths read the captured value, so a
+        # post-construction reassignment of ``.head`` changes neither — the
+        # already-traced step and the host epilogue can never desynchronize.
+        self.head = self._verdict_head = \
+            ClassifierHead() if head is None else head
+        last = self._stack[-1][0]
+        n_out = (last["qw"] if "qw" in last else last["w"]).shape[1]
+        self._verdict_head.validate(input_size, n_out)
         fusable = ops.model_fusable(model, self._stack)
         if fused and not fusable:
             raise ValueError(
@@ -232,6 +271,7 @@ class StreamEngine:
             self._arena_sharding = None
 
         w = window
+        verdict_head = self._verdict_head
 
         def _forward(win: jax.Array) -> jax.Array:
             if use_fused:
@@ -257,7 +297,13 @@ class StreamEngine:
             end = (pos + length) % w
             widx = (end + jnp.arange(w)) % w
             win = jnp.take(ring, widx, axis=1).reshape(ring.shape[0], -1)
-            return ring, _forward(win)
+            # The head's device epilogue runs inside the jitted step: for a
+            # reconstruction head the (S, input) decode is reduced to an
+            # (S, 1) score HERE, on device — under sharding the host then
+            # gathers one float per stream, never fleet x 400
+            # reconstructions.  (Row-local, so shard_map needs no new
+            # collectives.)
+            return ring, verdict_head.epilogue(win, _forward(win))
 
         if mesh is not None:
             # Each device runs the *whole* step body on its shard — ring
@@ -339,14 +385,17 @@ class StreamEngine:
             self.last_logits = logits
             latency = time.perf_counter() - t0
             miss = latency > self.deadline_s
-            probs = _softmax_np(logits)
+            # Host epilogue via the head: classifier -> argmax/softmax,
+            # reconstruction -> score-vs-threshold.
+            pred, prob, score, thr = self._verdict_head.host_verdicts(logits)
             cycle = self._count - 1
             for i in range(self.n_streams):
-                pred = int(logits[i].argmax())
                 verdicts.append(Verdict(
-                    stream=i, cycle=cycle, pred=pred,
-                    prob=float(probs[i, pred]), latency_s=latency,
-                    deadline_miss=miss))
+                    stream=i, cycle=cycle, pred=int(pred[i]),
+                    prob=None if prob is None else float(prob[i]),
+                    latency_s=latency, deadline_miss=miss,
+                    score=None if score is None else float(score[i]),
+                    threshold=thr))
             self.stats.steps += 1
             self.stats.windows += self.n_streams
             self.stats.deadline_misses += int(miss) * self.n_streams
@@ -382,9 +431,3 @@ class StreamEngine:
                 if on_verdict is not None:
                     on_verdict(v)
         return out
-
-
-def _softmax_np(logits: np.ndarray) -> np.ndarray:
-    z = logits - logits.max(axis=-1, keepdims=True)
-    e = np.exp(z)
-    return e / e.sum(axis=-1, keepdims=True)

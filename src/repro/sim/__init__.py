@@ -1,5 +1,9 @@
-from repro.sim.detector import (TrainResult, batched_forward, build_detector,
+from repro.sim.detector import (AETrainResult, TrainResult, batched_forward,
+                                build_autoencoder, build_detector,
+                                recalibrate_threshold, train_autoencoder,
                                 train_detector)
+from repro.sim.heads import (ClassifierHead, DetectorHead, ReconstructionHead,
+                             softmax_np)
 from repro.sim.msf import (ATTACK_NAMES, AttackEvent, CascadePID, CycleReading,
                            MSFPlant, PlantParams, PlantStream, SimTrace, adc,
                            build_dataset, make_attack, make_attacks, simulate)
@@ -8,8 +12,11 @@ from repro.sim.scenarios import (SCENARIOS, Scenario, build_fleet,
                                  list_scenarios, register_scenario,
                                  scenario_table)
 
-__all__ = ["TrainResult", "batched_forward", "build_detector",
-           "train_detector", "ATTACK_NAMES",
+__all__ = ["AETrainResult", "TrainResult", "batched_forward",
+           "build_autoencoder", "build_detector", "recalibrate_threshold",
+           "train_autoencoder",
+           "train_detector", "ClassifierHead", "DetectorHead",
+           "ReconstructionHead", "softmax_np", "ATTACK_NAMES",
            "AttackEvent", "CascadePID", "CycleReading", "MSFPlant",
            "PlantParams", "PlantStream", "SimTrace", "adc", "build_dataset",
            "make_attack", "make_attacks", "simulate", "SCENARIOS", "Scenario",

@@ -1,19 +1,28 @@
-"""Train the §7 anomaly-detection classifier and port it to the ICSML core.
+"""Head-generic training/eval for the §7 detection workloads.
 
-Model (paper-exact): 400 inputs (2 feats × 10 Hz × 20 s), hidden ReLU layers
-64/32/16, 2-class softmax head; sparse categorical cross-entropy, Adam
-(paper uses LR=1e-5 with 64-epoch-patience early stopping — we keep the
-architecture/loss/optimizer and use a larger LR + smaller patience so the run
-fits a CPU container), checkpoint-best weight saving.
+Two workloads share one MLP-body training loop (Adam, checkpoint-best weight
+saving, patience early stopping — the §7 recipe) and differ only in their
+:mod:`repro.sim.heads` head:
 
-The trained model is the 'established framework' artifact; porting to the
+* **Classifier** (paper-exact §7): 400 inputs (2 feats × 10 Hz × 20 s),
+  hidden ReLU layers 64/32/16, 2-class head; sparse categorical
+  cross-entropy on labeled windows (the paper uses LR=1e-5 with
+  64-epoch-patience early stopping — we keep the architecture/loss/optimizer
+  and use a larger LR + smaller patience so the run fits a CPU container).
+* **Autoencoder** (unsupervised): 400-64-16-64-400 reconstruction trained on
+  *benign* windows only with MSE; the anomaly score is the per-window mean
+  squared reconstruction error and the verdict threshold is calibrated to a
+  target false-positive rate on held-out normal traces
+  (:func:`train_autoencoder`).
+
+Either trained model is the 'established framework' artifact; porting to the
 ICSML runtime (§4.3) goes through ``repro.core.porting.port_mlp``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,9 +33,11 @@ from repro.core import layers as L
 from repro.core import sequential
 from repro.core.model import Model, ParamTree
 from repro.kernels import ops
+from repro.sim.heads import ClassifierHead, DetectorHead, ReconstructionHead
 
 
 def build_detector() -> Model:
+    """The §7 supervised classifier body: 400-64-32-16-2."""
     hidden = [L.Dense(units=h, activation="relu") for h in spec.HIDDEN]
     return sequential(
         [L.Input()] + hidden + [L.Dense(units=spec.CLASSES, activation="linear")],
@@ -34,13 +45,29 @@ def build_detector() -> Model:
     )
 
 
+def build_autoencoder() -> Model:
+    """The unsupervised reconstruction body: 400-64-16-64-400.
+
+    All-Dense with pad-safe activations, so it serves through the same fused
+    single-dispatch path as the classifier (the 400-wide decoder output rides
+    the K-gridded/widest-layer VMEM contract of ``kernels.fused_mlp``).
+    """
+    hidden = [L.Dense(units=h, activation="relu") for h in spec.AE_HIDDEN]
+    return sequential(
+        [L.Input()] + hidden
+        + [L.Dense(units=spec.INPUT_SIZE, activation="linear")],
+        (spec.INPUT_SIZE,),
+    )
+
+
 def batched_forward(model: Model, params: ParamTree, x: jax.Array, *,
                     backend: str = "auto") -> jax.Array:
-    """Whole-batch detector logits: ``(M, in) -> (M, classes)``.
+    """Whole-batch detector outputs: ``(M, in) -> (M, out)``.
 
-    All-Dense stacks (the detector, float or §6.1-quantized) run through the
-    fused whole-MLP path — one Pallas dispatch, weights VMEM-resident; other
-    models fall back to a vmapped per-sample ``model.apply``.
+    All-Dense stacks (classifier or autoencoder, float or §6.1-quantized)
+    run through the fused whole-MLP path — one Pallas dispatch, weights
+    VMEM-resident; other models fall back to a vmapped per-sample
+    ``model.apply``.
     """
     stack = ops.dense_stack(model, params)
     if ops.model_fusable(model, stack):
@@ -49,44 +76,55 @@ def batched_forward(model: Model, params: ParamTree, x: jax.Array, *,
 
 
 def sparse_ce(logits: jax.Array, labels: jax.Array) -> jax.Array:
-    logz = jax.scipy.special.logsumexp(logits, axis=-1)
-    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
-    return jnp.mean(logz - gold)
+    return ClassifierHead().loss(logits, None, labels)
 
 
 @dataclasses.dataclass
 class TrainResult:
     params: ParamTree
-    history: List[Tuple[int, float, float]]   # (epoch, train_loss, val_acc)
+    history: List[Tuple[int, float, float]]   # (epoch, train_loss, val_metric)
     best_val_acc: float
     test_acc: float
 
 
-def train_detector(
-    x: np.ndarray,
-    y: np.ndarray,
+@dataclasses.dataclass
+class AETrainResult:
+    params: ParamTree
+    history: List[Tuple[int, float, float]]   # (epoch, train_mse, -val_mse)
+    best_val_mse: float
+    head: ReconstructionHead                  # threshold-calibrated
+    threshold: float
+    calib_fpr: float                          # realized FPR on the calib split
+    test_detection_rate: float                # attack windows over threshold
+    calib_windows: np.ndarray                 # the held-out normal split —
+                                              # re-calibrate on THESE (e.g.
+                                              # post-quantization), never on
+                                              # training windows
+
+
+def _fit_head(
+    model: Model,
+    head: DetectorHead,
+    x_train: np.ndarray,
+    y_train: Optional[np.ndarray],
+    x_val: np.ndarray,
+    y_val: Optional[np.ndarray],
     *,
-    epochs: int = 60,
-    batch_size: int = 256,
-    lr: float = 3e-4,
-    patience: int = 8,
-    seed: int = 0,
-    splits: Tuple[float, float, float] = (0.7225, 0.1275, 0.15),  # §7
-) -> Tuple[Model, TrainResult]:
-    model = build_detector()
+    epochs: int,
+    batch_size: int,
+    lr: float,
+    patience: int,
+    seed: int,
+) -> Tuple[ParamTree, List[Tuple[int, float, float]], float]:
+    """The shared §7 training recipe, parameterized by the head's loss and
+    model-selection metric (greater is better): Adam, checkpoint-best weight
+    saving, patience early stopping.  Returns (best_params, history,
+    best_val_metric)."""
     params = model.init_params(jax.random.PRNGKey(seed))
-
-    n = len(x)
-    n_train = int(splits[0] * n)
-    n_val = int(splits[1] * n)
-    x_train, y_train = x[:n_train], y[:n_train]
-    x_val, y_val = x[n_train:n_train + n_val], y[n_train:n_train + n_val]
-    x_test, y_test = x[n_train + n_val:], y[n_train + n_val:]
-
     batched_apply = jax.vmap(model.apply, in_axes=(None, 0))
 
     def loss_fn(p, xb, yb):
-        return sparse_ce(batched_apply(p, xb), yb)
+        return head.loss(batched_apply(p, xb), xb, yb)
 
     # Adam (paper's optimizer), moments per leaf.
     @jax.jit
@@ -102,17 +140,19 @@ def train_detector(
         return jax.tree.map(upd, p, m, v), m, v, loss
 
     @jax.jit
-    def accuracy(p, xb, yb):
+    def val_metric(p, xb, yb):
         # Evaluation goes through the fused whole-MLP path (training's
         # gradient path stays on the vmapped apply above).
-        pred = jnp.argmax(batched_forward(model, p, xb), axis=-1)
-        return jnp.mean(pred == yb)
+        return head.metric(batched_forward(model, p, xb), xb, yb)
 
     m = jax.tree.map(jnp.zeros_like, params)
     v = jax.tree.map(jnp.zeros_like, params)
     rng = np.random.default_rng(seed)
     history: List[Tuple[int, float, float]] = []
-    best_val, best_params, since_best = -1.0, params, 0
+    best_val, best_params, since_best = -np.inf, params, 0
+    n_train = len(x_train)
+    xv = jnp.asarray(x_val)
+    yv = None if y_val is None else jnp.asarray(y_val)
     t = 0
 
     for epoch in range(epochs):
@@ -121,19 +161,137 @@ def train_detector(
         for i in range(0, n_train - batch_size + 1, batch_size):
             idx = perm[i:i + batch_size]
             t += 1
+            yb = None if y_train is None else jnp.asarray(y_train[idx])
             params, m, v, loss = step(params, m, v, t,
-                                      jnp.asarray(x_train[idx]),
-                                      jnp.asarray(y_train[idx]))
+                                      jnp.asarray(x_train[idx]), yb)
             losses.append(float(loss))
-        val_acc = float(accuracy(params, jnp.asarray(x_val), jnp.asarray(y_val)))
-        history.append((epoch, float(np.mean(losses)), val_acc))
-        if val_acc > best_val:            # checkpoint-best (§7)
-            best_val, best_params, since_best = val_acc, params, 0
+        val = float(val_metric(params, xv, yv))
+        history.append((epoch, float(np.mean(losses)), val))
+        if val > best_val:                # checkpoint-best (§7)
+            best_val, best_params, since_best = val, params, 0
         else:
             since_best += 1
             if since_best >= patience:    # early stopping (§7)
                 break
 
-    test_acc = float(accuracy(best_params, jnp.asarray(x_test), jnp.asarray(y_test)))
-    return model, TrainResult(params=best_params, history=history,
+    return best_params, history, best_val
+
+
+def train_detector(
+    x: np.ndarray,
+    y: np.ndarray,
+    *,
+    epochs: int = 60,
+    batch_size: int = 256,
+    lr: float = 3e-4,
+    patience: int = 8,
+    seed: int = 0,
+    splits: Tuple[float, float, float] = (0.7225, 0.1275, 0.15),  # §7
+) -> Tuple[Model, TrainResult]:
+    """The supervised §7 classifier: labeled windows, CE loss, argmax."""
+    model = build_detector()
+    head = ClassifierHead()
+
+    n = len(x)
+    n_train = int(splits[0] * n)
+    n_val = int(splits[1] * n)
+    x_train, y_train = x[:n_train], y[:n_train]
+    x_val, y_val = x[n_train:n_train + n_val], y[n_train:n_train + n_val]
+    x_test, y_test = x[n_train + n_val:], y[n_train + n_val:]
+
+    params, history, best_val = _fit_head(
+        model, head, x_train, y_train, x_val, y_val, epochs=epochs,
+        batch_size=batch_size, lr=lr, patience=patience, seed=seed)
+
+    test_acc = float(head.metric(
+        batched_forward(model, params, jnp.asarray(x_test)), None,
+        jnp.asarray(y_test)))
+    return model, TrainResult(params=params, history=history,
                               best_val_acc=best_val, test_acc=test_acc)
+
+
+def recalibrate_threshold(
+    model: Model,
+    params: ParamTree,
+    windows,
+    *,
+    target_fpr: float = spec.AE_TARGET_FPR,
+    backend: str = "auto",
+) -> Tuple[ReconstructionHead, np.ndarray]:
+    """Calibrate a :class:`ReconstructionHead` threshold against THIS
+    model/params' reconstruction scores on held-out **normal** windows.
+
+    The single source of the score-then-quantile sequence: initial training
+    calibration and every re-calibration (post-quantization, post-porting)
+    go through here, so the held-out-windows invariant — never calibrate on
+    training windows, they reconstruct optimistically and bias the quantile
+    low — lives in one place.  Returns ``(calibrated_head, scores)``.
+    """
+    w = jnp.asarray(windows)
+    scores = np.asarray(ReconstructionHead().scores(
+        batched_forward(model, params, w, backend=backend), w))
+    return ReconstructionHead().calibrate(scores, target_fpr), scores
+
+
+def train_autoencoder(
+    x: np.ndarray,
+    y: Optional[np.ndarray] = None,
+    *,
+    epochs: int = 60,
+    batch_size: int = 256,
+    lr: float = 1e-3,
+    patience: int = 8,
+    seed: int = 0,
+    splits: Tuple[float, float, float] = (0.7225, 0.1275, 0.15),
+    target_fpr: float = spec.AE_TARGET_FPR,
+) -> Tuple[Model, AETrainResult]:
+    """The unsupervised detector: train the 400-64-16-64-400 autoencoder on
+    **benign windows only** (labels, when given, are used solely to drop
+    attack windows from training — the label-free half of the ICS-defense
+    space), then calibrate the verdict threshold to ``target_fpr`` false
+    positives on a held-out normal split the optimizer never saw.
+
+    Returns the model plus an :class:`AETrainResult` whose ``head`` is the
+    calibrated :class:`ReconstructionHead` to serve with
+    (``StreamEngine(model, params, head=result.head, ...)``).
+    """
+    head = ReconstructionHead()
+    if y is not None:
+        normal = x[np.asarray(y) == 0]
+        attacks = x[np.asarray(y) != 0]
+    else:
+        normal, attacks = x, None
+    if len(normal) < 3 * batch_size:
+        raise ValueError(
+            f"need >= {3 * batch_size} benign windows to train/val/calibrate "
+            f"the autoencoder, got {len(normal)}")
+
+    model = build_autoencoder()
+    n = len(normal)
+    n_train = int(splits[0] * n)
+    n_val = int(splits[1] * n)
+    x_train = normal[:n_train]
+    x_val = normal[n_train:n_train + n_val]
+    x_calib = normal[n_train + n_val:]        # held-out normal traces
+
+    params, history, best_val = _fit_head(
+        model, head, x_train, None, x_val, None, epochs=epochs,
+        batch_size=batch_size, lr=lr, patience=patience, seed=seed)
+
+    # Threshold calibration: the (1 - target_fpr) quantile of reconstruction
+    # error on held-out normal windows the optimizer never touched.
+    head, calib_scores = recalibrate_threshold(model, params, x_calib,
+                                               target_fpr=target_fpr)
+    calib_fpr = float(np.mean(calib_scores > head.threshold))
+
+    detection = 0.0
+    if attacks is not None and len(attacks):
+        attack_scores = np.asarray(ReconstructionHead().scores(
+            batched_forward(model, params, jnp.asarray(attacks)),
+            jnp.asarray(attacks)))
+        detection = float(np.mean(attack_scores > head.threshold))
+
+    return model, AETrainResult(
+        params=params, history=history, best_val_mse=-best_val, head=head,
+        threshold=head.threshold, calib_fpr=calib_fpr,
+        test_detection_rate=detection, calib_windows=x_calib)

@@ -1,0 +1,170 @@
+"""Detector heads: what a detection workload computes *after* the MLP body.
+
+The §7 case study hardwired one head — a 2-class softmax classifier (CE loss,
+argmax verdict) — into three layers at once: training (`sim.detector`),
+serving (`serving.streams`' inlined softmax/argmax epilogue) and the fused
+kernel contract.  The dominant ICS-defense pattern is *unsupervised* anomaly
+detection (train on benign traffic only, flag by reconstruction error), which
+shares the whole MLP body / fused-kernel / fleet-serving machinery and differs
+only in the head.  This module makes the head a first-class object:
+
+* :class:`ClassifierHead` — supervised: sparse-CE loss over labeled windows,
+  verdict = argmax class with its softmax probability.
+* :class:`ReconstructionHead` — unsupervised: MSE loss on benign windows
+  only, anomaly score = per-window mean squared reconstruction error,
+  verdict = score > threshold, the threshold calibrated to a target
+  false-positive rate on held-out normal traces.
+
+A head contributes three things:
+
+1. ``loss(outputs, x, y)`` — the training objective (``sim.detector``'s
+   head-generic Adam loop calls it on batched model outputs).
+2. ``epilogue(win, out)`` — the **device-side** verdict reduction, traced
+   into the engine's jitted step (sharded and unsharded): for the classifier
+   it is the identity on the logits; for reconstruction it reduces the
+   (S, 400) reconstructions to an (S, 1) score **on device**, so the host
+   never materializes fleet x 400 reconstructions.
+3. ``host_verdicts(out)`` — the host-side epilogue turning the step output
+   into per-stream ``(pred, prob, score, threshold)`` verdict fields.
+
+Heads are stream-local (row-wise), so the epilogue rides through
+``shard_map`` untouched — the fleet mesh sees zero new collectives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def softmax_np(logits: np.ndarray) -> np.ndarray:
+    """Batched-stable host softmax: subtracts the per-row max along the last
+    axis before exponentiating, so rows of extreme logits (|z| ~ 1e4, the
+    saturated-detector regime) never overflow ``exp``."""
+    z = logits - logits.max(axis=-1, keepdims=True)
+    e = np.exp(z)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+class DetectorHead:
+    """Base: the loss / device epilogue / host verdict of one workload."""
+
+    name: str = "?"
+
+    def loss(self, outputs: jax.Array, x: jax.Array,
+             y: Optional[jax.Array]) -> jax.Array:
+        """Training objective over batched model outputs."""
+        raise NotImplementedError
+
+    def metric(self, outputs: jax.Array, x: jax.Array,
+               y: Optional[jax.Array]) -> jax.Array:
+        """Scalar model-selection metric — greater is better (checkpoint-best
+        and early stopping in the head-generic trainer key on it)."""
+        raise NotImplementedError
+
+    def validate(self, input_size: int, n_outputs: int) -> None:
+        """Raise early (engine construction) if the model can't carry this
+        head; the default accepts any output width."""
+
+    def epilogue(self, win: jax.Array, out: jax.Array) -> jax.Array:
+        """Device-side reduction from raw model outputs to the per-stream
+        verdict payload; traced into the engine's jitted detector step."""
+        raise NotImplementedError
+
+    def host_verdicts(self, out: np.ndarray) -> Tuple[
+            np.ndarray, Optional[np.ndarray], Optional[np.ndarray],
+            Optional[float]]:
+        """Step output -> (pred, prob|None, score|None, threshold|None),
+        each an array over streams (threshold is one float for the fleet)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifierHead(DetectorHead):
+    """Supervised classifier: CE loss, argmax verdict (§7's head)."""
+
+    name: str = "classifier"
+
+    def loss(self, outputs, x, y):
+        logz = jax.scipy.special.logsumexp(outputs, axis=-1)
+        gold = jnp.take_along_axis(outputs, y[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    def metric(self, outputs, x, y):
+        return jnp.mean(jnp.argmax(outputs, axis=-1) == y)
+
+    def epilogue(self, win, out):
+        return out                      # the logits ARE the verdict payload
+
+    def host_verdicts(self, out):
+        pred = out.argmax(axis=-1)
+        prob = softmax_np(out)[np.arange(len(out)), pred]
+        return pred.astype(np.int64), prob, None, None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconstructionHead(DetectorHead):
+    """Unsupervised autoencoder: MSE loss on benign windows, anomaly score =
+    per-window mean squared reconstruction error, verdict = score exceeding
+    a threshold calibrated to ``target_fpr`` on held-out normal traces.
+
+    ``threshold`` is None until calibrated (:meth:`calibrate` /
+    ``sim.detector.train_autoencoder``); serving requires it.
+    """
+
+    threshold: Optional[float] = None
+    name: str = "reconstruction"
+
+    def loss(self, outputs, x, y):
+        return jnp.mean(self.scores(outputs, x))
+
+    def metric(self, outputs, x, y):
+        # Lower reconstruction error is better; the trainer maximizes.
+        return -self.loss(outputs, x, y)
+
+    def validate(self, input_size: int, n_outputs: int) -> None:
+        if n_outputs != input_size:
+            raise ValueError(
+                f"ReconstructionHead needs an autoencoder whose output width "
+                f"({n_outputs}) equals its input width ({input_size})")
+        if self.threshold is None:
+            raise ValueError(
+                "ReconstructionHead has no threshold; calibrate it on "
+                "held-out normal traces first (head.calibrate / "
+                "sim.detector.train_autoencoder)")
+
+    def epilogue(self, win, out):
+        # On-device score reduction: (S, 400) reconstructions -> (S, 1)
+        # errors before anything leaves the device, so a sharded fleet ships
+        # one float per stream to the host rather than the full decode.
+        return self.scores(out, win)[:, None]
+
+    def scores(self, recon: jax.Array, x: jax.Array) -> jax.Array:
+        """Per-window anomaly scores from batched reconstructions."""
+        return jnp.mean(jnp.square(recon - x), axis=-1)
+
+    def calibrate(self, normal_scores: np.ndarray,
+                  target_fpr: float) -> "ReconstructionHead":
+        """A new head whose threshold yields ``target_fpr`` false positives
+        on the given held-out *normal* window scores."""
+        if not 0.0 < target_fpr < 1.0:
+            raise ValueError(f"target_fpr must be in (0, 1), got {target_fpr}")
+        scores = np.asarray(normal_scores, np.float64)
+        if scores.size == 0:
+            raise ValueError("cannot calibrate on zero normal scores")
+        thr = float(np.quantile(scores, 1.0 - target_fpr))
+        return dataclasses.replace(self, threshold=thr)
+
+    def host_verdicts(self, out):
+        if self.threshold is None:
+            raise ValueError(
+                "ReconstructionHead has no threshold; calibrate it on "
+                "held-out normal traces first (head.calibrate / "
+                "sim.detector.train_autoencoder)")
+        score = out[:, 0] if out.ndim == 2 else out
+        pred = (score > self.threshold).astype(np.int64)
+        return pred, None, score, self.threshold

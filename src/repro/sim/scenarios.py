@@ -169,14 +169,23 @@ def fleet_readings(
 
 
 def scenario_table() -> str:
-    """Human-readable library summary (used by examples/detect_fleet.py)."""
-    rows = ["name                     families  composed  events"]
+    """Human-readable library summary (used by examples/detect_fleet.py).
+
+    ``onsets``/``durations`` list *every* scheduled event — a composed
+    multi-attack scenario shows each attack's start cycle and length
+    (``rest`` = persists to the end of the run), not just the first one.
+    """
+    rows = [f"{'name':<24} {'families':<9} {'onsets':<13} {'durations':<13} "
+            "events"]
     for s in SCENARIOS.values():
         fams = ",".join(str(f) for f in s.families) or "-"
+        onsets = ",".join(str(e.start) for e in s.events) or "-"
+        durs = ",".join("rest" if e.duration is None else str(e.duration)
+                        for e in s.events) or "-"
         evs = "; ".join(
             f"{ATTACK_NAMES[e.attack_id]}@{e.start}"
             + (f"+{e.duration}" if e.duration is not None else "")
             + (f" x{e.intensity:g}" if e.intensity != 1.0 else "")
             for e in s.events) or "(benign)"
-        rows.append(f"{s.name:<24} {fams:<9} {str(s.composed):<9} {evs}")
+        rows.append(f"{s.name:<24} {fams:<9} {onsets:<13} {durs:<13} {evs}")
     return "\n".join(rows)

@@ -10,10 +10,11 @@ import jax.numpy as jnp
 from _hyp import given, settings, st
 from repro.core import layers as L
 from repro.core import quantize, sequential
+from repro.kernels import fused_mlp as fused_mlp_mod
 from repro.kernels import ops
 from repro.serving import StreamEngine
 from repro.serving.streams import _dense_batched
-from repro.sim import build_detector, fleet_readings
+from repro.sim import build_autoencoder, build_detector, fleet_readings
 from repro.sim.detector import batched_forward
 
 SCHEMES = ("REAL", "SINT", "INT", "DINT")
@@ -162,6 +163,146 @@ class TestSingleDispatch:
         block = jnp.zeros((16, eng.stride, 2), jnp.float32)
         jaxpr = jax.make_jaxpr(eng._step)(ring, block, jnp.int32(0))
         assert count_pallas_calls(jaxpr.jaxpr) == 4
+
+
+def autoencoder_params(scheme, seed=0):
+    """The 400-64-16-64-400 reconstruction detector, optionally quantized
+    with input-range calibration."""
+    model = build_autoencoder()
+    params = model.init_params(jax.random.PRNGKey(seed))
+    if scheme != "REAL":
+        calib = [jax.random.normal(jax.random.PRNGKey(300 + i), (400,))
+                 for i in range(4)]
+        params = quantize.quantize_params(model, params, scheme,
+                                          calibration=calib)
+    return model, params
+
+
+class TestKGriddedFirstLayer:
+    """The K grid streams the first layer's input width through VMEM one
+    (block_k, N1) slab at a time: parity across split factors, K widths not
+    divisible by the slab, exact-at-budget stacks, and wide-input stacks
+    the old whole-net-in-VMEM accounting rejected."""
+
+    @pytest.mark.parametrize("scheme", SCHEMES)
+    @pytest.mark.parametrize("block_k", (128, 256))
+    @pytest.mark.parametrize("build", (detector_params, autoencoder_params))
+    def test_kgrid_matches_oracle(self, scheme, block_k, build):
+        model, params = build(scheme)
+        stack = dense_stack(model, params)
+        x = jax.random.normal(jax.random.PRNGKey(block_k), (9, 400))
+        want = ops.fused_forward(x, stack, backend="ref")
+        got = ops.fused_forward(x, stack, backend="pallas", block_k=block_k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_kgrid_int8_split_is_bit_exact(self):
+        """int8 first layers accumulate split-K partials in an int32
+        scratch — integer accumulation is associative, so any split factor
+        bit-matches the unsplit kernel."""
+        model, params = detector_params("SINT")
+        stack = dense_stack(model, params)
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 400))
+        unsplit = ops.fused_forward(x, stack, backend="pallas")
+        for block_k in (128, 256):
+            split = ops.fused_forward(x, stack, backend="pallas",
+                                      block_k=block_k)
+            np.testing.assert_array_equal(np.asarray(split),
+                                          np.asarray(unsplit))
+
+    @pytest.mark.parametrize("scheme", ("REAL", "SINT"))
+    def test_k_not_divisible_by_grid_block(self, scheme):
+        """block_k=384 over the 512-padded 400-wide input: K pads up to 768
+        (zero x-lanes times zero weight rows), and parity holds."""
+        model, params = autoencoder_params(scheme)
+        stack = dense_stack(model, params)
+        x = jax.random.normal(jax.random.PRNGKey(5), (7, 400))
+        want = ops.fused_forward(x, stack, backend="ref")
+        got = ops.fused_forward(x, stack, backend="pallas", block_k=384)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_kgrid_is_still_one_dispatch(self):
+        model, params = detector_params("SINT")
+        stack = dense_stack(model, params)
+        x = jnp.zeros((16, 400))
+        jaxpr = jax.make_jaxpr(
+            lambda a: ops.fused_forward(a, stack, backend="pallas",
+                                        block_k=128))(x)
+        assert count_pallas_calls(jaxpr.jaxpr) == 1
+
+    def test_widest_layer_exactly_at_budget_fits(self, monkeypatch):
+        """The budget check is <=: a stack whose resident set is EXACTLY the
+        VMEM budget fuses (and dispatches); one byte less and it falls back."""
+        model, params = detector_params("SINT")
+        stack = dense_stack(model, params)
+        shapes, bk = ops._padded_shapes(stack, None)
+        exact = fused_mlp_mod.fused_vmem_bytes(shapes, block_m=128,
+                                               block_k=bk)
+        monkeypatch.setattr(fused_mlp_mod, "VMEM_BUDGET_BYTES", exact)
+        assert ops.can_fuse(stack)
+        x = jax.random.normal(jax.random.PRNGKey(1), (5, 400))
+        got = ops.fused_forward(x, stack, backend="pallas")
+        np.testing.assert_allclose(
+            np.asarray(got),
+            np.asarray(ops.fused_forward(x, stack, backend="ref")),
+            rtol=1e-5, atol=1e-4)
+        monkeypatch.setattr(fused_mlp_mod, "VMEM_BUDGET_BYTES", exact - 1)
+        assert not ops.can_fuse(stack)
+        with pytest.raises(ValueError):
+            ops.fused_forward(x, stack, backend="pallas")
+
+    def test_wide_input_fuses_only_via_kgrid(self):
+        """An 8192-wide first layer (16 MB f32 — over budget in full) fuses
+        now: the K grid keeps one 512-row slab resident.  The old
+        whole-net accounting would have rejected it."""
+        model = sequential([L.Input(),
+                            L.Dense(units=512, activation="relu"),
+                            L.Dense(units=2, activation="linear")], (8192,))
+        params = model.init_params(jax.random.PRNGKey(0))
+        stack = dense_stack(model, params)
+        w0 = stack[0][0]["w"]
+        assert w0.size * w0.dtype.itemsize > fused_mlp_mod.VMEM_BUDGET_BYTES
+        assert ops.can_fuse(stack)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 8192)) * 0.1
+        got = ops.fused_forward(x, stack, backend="pallas")
+        want = ops.fused_forward(x, stack, backend="ref")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_wide_later_layer_still_falls_back(self):
+        """The K grid only streams layer 0 — a later layer past the budget
+        keeps the stack on the per-layer path (the widest-layer check)."""
+        model = sequential([L.Input(),
+                            L.Dense(units=2048, activation="relu"),
+                            L.Dense(units=2048, activation="linear")], (128,))
+        params = model.init_params(jax.random.PRNGKey(0))
+        stack = dense_stack(model, params)
+        assert not ops.can_fuse(stack)    # layer 1: 2048x2048 f32 = 16 MB
+
+
+class TestSingleDispatchAutoencoder:
+    """Issue acceptance: the 400-64-16-64-400 autoencoder shape runs as ONE
+    fused Pallas dispatch — the 400-wide decoder output rides the same
+    kernel as the classifier head."""
+
+    @pytest.mark.parametrize("scheme", ("REAL", "SINT"))
+    def test_fused_forward_is_one_dispatch(self, scheme):
+        model, params = autoencoder_params(scheme)
+        stack = dense_stack(model, params)
+        x = jnp.zeros((16, 400))
+        jaxpr = jax.make_jaxpr(
+            lambda a: ops.fused_forward(a, stack, backend="pallas"))(x)
+        assert count_pallas_calls(jaxpr.jaxpr) == 1
+
+    def test_autoencoder_pallas_matches_per_layer(self):
+        model, params = autoencoder_params("SINT")
+        stack = dense_stack(model, params)
+        x = jax.random.normal(jax.random.PRNGKey(9), (23, 400))
+        fused = ops.fused_forward(x, stack, backend="pallas")
+        per_layer = per_layer_forward(x, stack, backend="ref")
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(per_layer),
+                                   rtol=1e-5, atol=1e-4)
 
 
 def small_detector(scheme, seed):
