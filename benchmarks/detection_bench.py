@@ -22,6 +22,13 @@ the fused autoencoder row) plus its own ``detect_ae_shard_d<N>``
 device-scaling ladder — verdicts via the ReconstructionHead's on-device
 score reduction, so sharded hosts gather one float per stream.
 
+**Grouped-fleet rows** (``detect_grouped_*``): the heterogeneous
+model-group question — the fleet split four ways across
+classifier/autoencoder/margin/forecast groups served by ONE
+``GroupedStreamEngine`` (a single jitted step, one fused dispatch per
+group) vs one ``StreamEngine`` per model; ``vs_split`` is the paired-pass
+grouped speedup.
+
 **Device scaling** (``detect_fleet_shard_d<N>`` rows): the stream-axis
 sharded engine at 1/2/4/8 devices (1/2 under ``--quick``), each device
 owning a ``spec.STREAMS_PER_DEVICE``-plant shard of the fleet (weak
@@ -58,9 +65,10 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import msf_detector as spec
 from repro.core import quantize
-from repro.serving import StreamEngine
-from repro.sim import (ReconstructionHead, build_autoencoder, build_detector,
-                       fleet_readings)
+from repro.serving import GroupedStreamEngine, ModelGroup, StreamEngine
+from repro.sim import (ForecastHead, MarginHead, ReconstructionHead,
+                       build_autoencoder, build_detector, build_forecaster,
+                       build_margin_model, fleet_readings)
 
 Row = dict
 
@@ -170,6 +178,95 @@ def run_naive(model, params, readings, *, stride: int,
                               key=lambda r: r[1] / max(r[0], 1))
     p99 = float(np.percentile(lats, 99)) if lats else 0.0
     return windows, wall, p99
+
+
+def mixed_group_detectors(scheme: str, calib) -> list:
+    """(name, model, params, head) for the four-way heterogeneous fleet:
+    classifier + autoencoder + one-class margin + next-step forecaster,
+    each optionally quantized (the forecaster's calibration samples pass
+    through its head's window view, like serving will)."""
+    heads = {
+        "mlp": None,
+        "ae": ReconstructionHead(threshold=BENCH_AE_THRESHOLD),
+        "margin": MarginHead(threshold=BENCH_AE_THRESHOLD,
+                             center=(0.0,) * spec.MARGIN_EMBED),
+        "forecast": ForecastHead(threshold=BENCH_AE_THRESHOLD),
+    }
+    builders = {"mlp": build_detector, "ae": build_autoencoder,
+                "margin": build_margin_model, "forecast": build_forecaster}
+    out = []
+    for i, name in enumerate(("mlp", "ae", "margin", "forecast")):
+        model = builders[name]()
+        params = model.init_params(jax.random.PRNGKey(10 + i))
+        if scheme != "REAL":
+            head = heads[name]
+            c = calib if head is None else [head.prepare(s) for s in calib]
+            params = quantize.quantize_params(model, params, scheme,
+                                              calibration=c)
+        out.append((name, model, params, heads[name]))
+    return out
+
+
+def run_grouped_pair(detectors, readings, *, stride: int,
+                     reps: int = 12) -> dict:
+    """Grouped engine vs N independent split engines over the same mixed
+    fleet, interleaved-pass discipline (run_engine_pair conventions).
+
+    The deployment question: a fleet whose streams carry different models
+    can be served by one :class:`GroupedStreamEngine` (one jitted step, one
+    fused dispatch per group) or by one :class:`StreamEngine` per model
+    (one jitted step EACH, host python between them).  Returns
+    {"grouped": (windows, wall_s, p99_s), "split": ..., "ratio": r} with
+    ``ratio`` = median paired split-wall / grouped-wall (grouped speedup)."""
+    n_cycles, n_streams, _ = readings.shape
+    n_per = n_streams // len(detectors)
+    groups = [ModelGroup(name, m, p, n_per, head)
+              for name, m, p, head in detectors]
+    ge = GroupedStreamEngine(groups, stride=stride)
+    ge.warmup()
+    splits = [(i * n_per, StreamEngine(m, p, n_streams=n_per, stride=stride,
+                                       head=head))
+              for i, (name, m, p, head) in enumerate(detectors)]
+    for eng in (e for _, e in splits):
+        eng.warmup()
+    for c in range(min(spec.WINDOW, n_cycles)):   # ring fill, uncounted
+        ge.ingest(readings[c % n_cycles])
+        for off, eng in splits:
+            eng.ingest(readings[c % n_cycles][off:off + n_per])
+    best = {"grouped": None, "split": None}
+    ratios = []
+    for rep in range(reps):
+        order = (("grouped", "split") if rep % 2 == 0
+                 else ("split", "grouped"))
+        walls = {}
+        for kind in order:
+            if kind == "grouped":
+                w0, l0 = ge.stats.windows, len(ge.stats.latencies_s)
+                t0 = time.perf_counter()
+                for c in range(n_cycles):
+                    ge.ingest(readings[c])
+                wall = time.perf_counter() - t0
+                windows = ge.stats.windows - w0
+                lats = list(ge.stats.latencies_s[l0:])
+            else:
+                w0 = sum(e.stats.windows for _, e in splits)
+                l0s = [len(e.stats.latencies_s) for _, e in splits]
+                t0 = time.perf_counter()
+                for c in range(n_cycles):
+                    for off, eng in splits:
+                        eng.ingest(readings[c][off:off + n_per])
+                wall = time.perf_counter() - t0
+                windows = sum(e.stats.windows for _, e in splits) - w0
+                lats = [v for (_, e), l0_ in zip(splits, l0s)
+                        for v in e.stats.latencies_s[l0_:]]
+            walls[kind] = wall
+            if best[kind] is None or wall / max(windows, 1) < \
+                    best[kind][1] / max(best[kind][0], 1):
+                best[kind] = (windows, wall,
+                              float(np.percentile(lats, 99)) if lats else 0.0)
+        ratios.append(walls["split"] / walls["grouped"])
+    best["ratio"] = float(np.median(ratios))
+    return best
 
 
 def synthetic_readings(n_streams: int, n_cycles: int, seed: int) -> np.ndarray:
@@ -355,6 +452,31 @@ def main(quick: bool = False, n_streams: int = 16, n_cycles: int = 0):
         wps_pl, wps_f = emit_pair_rows(f"detect_ae_{scheme.lower()}", pair)
         print(f"# ae {scheme}: fused {wps_f:.0f} vs per-layer {wps_pl:.0f} "
               f"windows/s (paired ratio {pair['ratio']:.2f}x)")
+
+    # Heterogeneous model-group fleet (detect_grouped_* rows): the fleet
+    # split four ways across classifier/autoencoder/margin/forecast groups,
+    # served by ONE GroupedStreamEngine (one fused dispatch per group inside
+    # one jitted step) vs one StreamEngine per model.  --quick keeps SINT so
+    # the CI artifact always carries a grouped row.
+    grouped_schemes = ("SINT",) if quick else ("REAL", "SINT")
+    for scheme in grouped_schemes:
+        detectors = mixed_group_detectors(scheme, calib)
+        pair = run_grouped_pair(detectors, readings, stride=stride)
+        wps = {}
+        for kind, suffix in (("split", "split"), ("grouped", "")):
+            w, wall, p99 = pair[kind]
+            wps[kind] = w / wall
+            name = f"detect_grouped_{scheme.lower()}" + \
+                (f"_{suffix}" if suffix else "")
+            derived = f"windows_s={wps[kind]:.0f};p99_ms={p99 * 1e3:.2f}"
+            if kind == "grouped":
+                derived += f";groups=4;vs_split={pair['ratio']:.2f}x"
+            rows.append({"name": name,
+                         "us_per_call": wall / max(w, 1) * 1e6,
+                         "derived": derived})
+        print(f"# grouped {scheme}: {wps['grouped']:.0f} vs split "
+              f"{wps['split']:.0f} windows/s "
+              f"(paired ratio {pair['ratio']:.2f}x)")
 
     print(f"# device scaling ({spec.STREAMS_PER_DEVICE} plants/device)")
     rows.extend(run_scaling(quick))

@@ -16,6 +16,14 @@ re-calibrated on the quantized model when ``--quant`` is not REAL, so the
 served scores match the served arithmetic).  Both serve through the same
 fused single-dispatch detector step.
 
+``--mixed`` serves a *heterogeneous model-group fleet* instead: the plants
+are partitioned into four model groups — supervised classifier,
+reconstruction autoencoder, one-class margin detector, next-step
+forecaster — each group carrying its own trained model, verdict head,
+calibrated threshold and quantization scales, all batched by ONE
+``GroupedStreamEngine`` whose jitted step runs one fused dispatch per
+group per verdict cadence.
+
 With ``--devices N`` the engine shards the fleet's stream axis over an
 N-device ``("data",)`` mesh — on a CPU host the devices are fanned out via
 ``XLA_FLAGS=--xla_force_host_platform_device_count`` (set here before jax
@@ -26,6 +34,7 @@ Run:
   PYTHONPATH=src python examples/detect_fleet.py --scenarios stealth-drift
   PYTHONPATH=src python examples/detect_fleet.py --plants 16 --quant SINT
   PYTHONPATH=src python examples/detect_fleet.py --plants 64 --devices 4
+  PYTHONPATH=src python examples/detect_fleet.py --mixed --fast --plants 16
 """
 
 import argparse
@@ -58,9 +67,10 @@ from repro.core import porting, quantize
 from repro.launch.mesh import make_fleet_mesh
 from repro.sim import (SCENARIOS, build_dataset, build_fleet, get_scenario,
                        recalibrate_threshold, scenario_table,
-                       train_autoencoder, train_detector)
+                       train_autoencoder, train_detector, train_forecaster,
+                       train_one_class)
 from repro.sim.msf import SCAN_DT
-from repro.serving import StreamEngine
+from repro.serving import GroupedStreamEngine, ModelGroup, StreamEngine
 
 
 def train_and_port(fast: bool, quant: str, detector: str):
@@ -102,6 +112,59 @@ def train_and_port(fast: bool, quant: str, detector: str):
     return model, params, head
 
 
+def _port_and_quantize(model, res, head, quant, x, y):
+    """Shared §4.3 port + §6.1 quantize + (score heads) threshold
+    re-calibration against the quantized arithmetic."""
+    with tempfile.TemporaryDirectory() as tmp:
+        model, params = porting.port_mlp(model, res.params, tmp)
+    if quant != "REAL":
+        calib = quantize.calibration_samples(x, y)
+        if head is not None:
+            # Heads with non-identity window geometry (the forecaster) eat a
+            # slice of the window; quantization scales must see the same view.
+            calib = [head.prepare(c) for c in calib]
+        params = quantize.quantize_params(model, params, quant,
+                                          calibration=calib)
+        if head is not None:
+            head, _ = recalibrate_threshold(model, params, res.calib_windows,
+                                            head=head)
+    return model, params, head
+
+
+def train_mixed(fast: bool, quant: str):
+    """Train/port/quantize all four detector types for the grouped fleet."""
+    scale = 0.2 if fast else 0.5
+    epochs = 30 if fast else 60
+    print("== dataset + training x4 (mixed model-group fleet) ==")
+    x, y = build_dataset(normal_cycles=int(42_000 * scale),
+                         attack_cycles=int(5_700 * scale), stride=8, seed=0,
+                         jitter=0.015, jitter_plants=4)
+    trained = []
+    model, res = train_detector(x, y, epochs=epochs, patience=8, lr=1e-3)
+    print(f"  mlp:      val acc {res.best_val_acc:.4f}  "
+          f"test acc {res.test_acc:.4f}")
+    trained.append(("mlp", model, res, None))
+    for name, trainer in (("ae", train_autoencoder),
+                          ("margin", train_one_class),
+                          ("forecast", train_forecaster)):
+        model, res = trainer(x, y, epochs=epochs, patience=8, lr=1e-3)
+        print(f"  {name + ':':<9} threshold {res.threshold:.6f}  "
+              f"calib FPR {res.calib_fpr:.4f}  "
+              f"attack-window detection {res.test_detection_rate:.4f}")
+        trained.append((name, model, res, res.head))
+    print("== porting to ICSML (§4.3)"
+          + (f" + quantizing to {quant} (§6.1)" if quant != "REAL" else "")
+          + " ==")
+    out = []
+    for name, model, res, head in trained:
+        model, params, head = _port_and_quantize(model, res, head, quant, x, y)
+        if head is not None and quant != "REAL":
+            print(f"  {name}: re-calibrated {quant} threshold "
+                  f"{head.threshold:.6f}")
+        out.append((name, model, params, head))
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenarios", default="all",
@@ -113,6 +176,10 @@ def main():
     ap.add_argument("--detector", default="mlp", choices=("mlp", "ae"),
                     help="mlp: supervised §7 classifier; ae: unsupervised "
                          "reconstruction-error autoencoder")
+    ap.add_argument("--mixed", action="store_true",
+                    help="serve a heterogeneous model-group fleet "
+                         "(classifier + autoencoder + margin + forecast "
+                         "groups in one GroupedStreamEngine)")
     ap.add_argument("--jitter", type=float, default=None,
                     help="override per-scenario plant jitter")
     ap.add_argument("--seed", type=int, default=0)
@@ -133,44 +200,68 @@ def main():
     for n in names:
         get_scenario(n)   # fail fast on typos
 
-    model, params, head = train_and_port(args.fast, args.quant, args.detector)
-
     mesh = make_fleet_mesh(args.devices) if args.devices > 1 else None
     shard_note = (f", sharded over {args.devices} devices "
                   f"({-(-args.plants // args.devices)} streams/device)"
                   if mesh is not None else "")
-    print(f"== serving {args.plants} plants x {args.cycles} cycles "
-          f"({args.detector}/{args.quant}{shard_note}) ==")
     fleet = build_fleet(names, args.plants, seed=args.seed + 1000,
                         jitter=args.jitter)
     # --devices 1 pins sharding OFF even in a multi-device process, so the
     # flag always means what the serve header prints.
-    engine = StreamEngine(model, params, n_streams=args.plants, head=head,
-                          **({"mesh": mesh} if mesh is not None
-                             else {"shard": False}))
+    shard_kw = {"mesh": mesh} if mesh is not None else {"shard": False}
+    if args.mixed:
+        detectors = train_mixed(args.fast, args.quant)
+        if args.plants < len(detectors):
+            ap.error(f"--mixed needs at least {len(detectors)} plants")
+        base, extra = divmod(args.plants, len(detectors))
+        groups = [ModelGroup(name, model, params,
+                             base + (1 if i < extra else 0), head)
+                  for i, (name, model, params, head) in enumerate(detectors)]
+        engine = GroupedStreamEngine(groups, **shard_kw)
+        split = " + ".join(f"{n}x{name}" for name, _, n in engine.groups)
+        print(f"== serving {args.plants} plants x {args.cycles} cycles "
+              f"(mixed: {split} / {args.quant}{shard_note}) ==")
+    else:
+        model, params, head = train_and_port(args.fast, args.quant,
+                                             args.detector)
+        engine = StreamEngine(model, params, n_streams=args.plants, head=head,
+                              **shard_kw)
+        print(f"== serving {args.plants} plants x {args.cycles} cycles "
+              f"({args.detector}/{args.quant}{shard_note}) ==")
     engine.warmup()
     flagged = collections.defaultdict(list)   # stream -> attack-verdict cycles
     for v in engine.run(fleet, args.cycles):
         if v.pred != 0:
             flagged[v.stream].append(v.cycle)
 
-    print(f"{'plant':<26} {'onset':>6} {'first-flag':>10} {'latency':>9} "
-          f"{'pre-onset FPs':>13}")
+    group_of = {}
+    if args.mixed:
+        for gname, off, n in engine.groups:
+            for s in range(off, off + n):
+                group_of[s] = gname
+    gcol = f"{'group':<9} " if args.mixed else ""
+    print(f"{'plant':<26} {gcol}{'onset':>6} {'first-flag':>10} "
+          f"{'latency':>9} {'pre-onset FPs':>13}")
     for i, plant in enumerate(fleet):
         sc = get_scenario(plant.name.split("#")[0])
         onset = sc.onset
         cycles = flagged.get(i, [])
+        g = f"{group_of[i]:<9} " if args.mixed else ""
         if onset is None:
-            print(f"{plant.name:<26} {'-':>6} {'-':>10} {'-':>9} "
+            print(f"{plant.name:<26} {g}{'-':>6} {'-':>10} {'-':>9} "
                   f"{len(cycles):>13}")
             continue
         hits = [c for c in cycles if c >= onset]
         fps = len([c for c in cycles if c < onset])
         first = hits[0] if hits else None
         lat = f"{(first - onset) * SCAN_DT:.1f}s" if first is not None else "miss"
-        print(f"{plant.name:<26} {onset:>6} "
+        print(f"{plant.name:<26} {g}{onset:>6} "
               f"{first if first is not None else 'miss':>10} {lat:>9} {fps:>13}")
 
+    if args.mixed:
+        gw = engine.group_windows()
+        print("\nper-group verdicts: "
+              + "  ".join(f"{k}={v}" for k, v in gw.items()))
     st = engine.stats
     print(f"\nserve stats: {st.steps} detector steps, {st.windows} windows, "
           f"{st.windows_per_s():.0f} windows/s | verdict latency "

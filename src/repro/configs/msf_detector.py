@@ -14,6 +14,15 @@ CLASSES = 2
 # positives on held-out normal traces (sim.detector.train_autoencoder).
 AE_HIDDEN = (64, 16, 64)
 AE_TARGET_FPR = 0.01
+
+# One-class margin detector (Deep-SVDD-style): the §7 trunk embedding
+# windows into MARGIN_EMBED dims; anomaly score = squared distance from the
+# benign center, threshold = FPR-calibrated margin radius.
+MARGIN_EMBED = 16
+
+# Next-step-prediction detector: (WINDOW - 1) readings in, one reading out
+# (the ForecastHead asks the serving ring for the extra target reading).
+FORECAST_HIDDEN = (64, 32)
 WINDOW_SECONDS = 20
 READINGS_PER_SECOND = 10
 N_FEATURES = 2

@@ -129,6 +129,34 @@ def _padded_shapes(stack: LayerStack,
     return shapes, bk
 
 
+def fuse_reason(stack: LayerStack, *,
+                block_k: Optional[int] = None) -> Optional[str]:
+    """None when a layer stack can run as one fused Pallas dispatch, else a
+    human-readable reason it cannot — the diagnosable form of
+    :func:`can_fuse`, surfaced by the engines' ``fused=True`` errors (a
+    heterogeneous model-group fleet mixes many stacks, and "group 3 of 7 is
+    not fusable" needs a *why* attached)."""
+    if not stack:
+        return "empty layer stack"
+    for i, (p, act) in enumerate(stack):
+        if act not in FUSED_ACTIVATIONS:
+            return (f"layer {i} activation {act!r} is not pad-safe "
+                    f"(fusable: {sorted(FUSED_ACTIVATIONS)})")
+        if "qw" in p:
+            if p["qw"].ndim != 2 or "w_scale" not in p or "x_scale" not in p:
+                return (f"layer {i} quantized params are malformed "
+                        "(need 2-D qw with w_scale and x_scale)")
+        elif "w" not in p or p["w"].ndim != 2:
+            return f"layer {i} has no 2-D dense weight"
+    shapes, bk = _padded_shapes(stack, block_k)
+    # Mirror fused_mlp's estimate at the worst-case 128-row tile.
+    vmem = _fused_mod.fused_vmem_bytes(shapes, block_m=128, block_k=bk)
+    if vmem > _fused_mod.VMEM_BUDGET_BYTES:
+        return (f"VMEM resident set {vmem} bytes exceeds the kernel budget "
+                f"{_fused_mod.VMEM_BUDGET_BYTES}")
+    return None
+
+
 def can_fuse(stack: LayerStack, *, block_k: Optional[int] = None) -> bool:
     """True when a layer stack can run as one fused Pallas dispatch.
 
@@ -139,22 +167,9 @@ def can_fuse(stack: LayerStack, *, block_k: Optional[int] = None) -> bool:
     input (or a wide autoencoder decoder output) no longer disqualifies
     fusion; each *later* layer must still fit in full (widest-layer check).
     Oversized stacks fall back to the per-layer path instead of failing at
-    dispatch time.
+    dispatch time.  (:func:`fuse_reason` is the diagnosable form.)
     """
-    if not stack:
-        return False
-    for p, act in stack:
-        if act not in FUSED_ACTIVATIONS:
-            return False
-        if "qw" in p:
-            if p["qw"].ndim != 2 or "w_scale" not in p or "x_scale" not in p:
-                return False
-        elif "w" not in p or p["w"].ndim != 2:
-            return False
-    shapes, bk = _padded_shapes(stack, block_k)
-    # Mirror fused_mlp's estimate at the worst-case 128-row tile.
-    return _fused_mod.fused_vmem_bytes(
-        shapes, block_m=128, block_k=bk) <= _fused_mod.VMEM_BUDGET_BYTES
+    return fuse_reason(stack, block_k=block_k) is None
 
 
 def _fused_layer(p: Dict[str, jax.Array], act: str, block: int) -> FusedLayer:

@@ -1,7 +1,10 @@
 from repro.serving.continuous import ContinuousEngine, ServeStats
 from repro.serving.cyclic import CyclicDecoder
 from repro.serving.engine import Completion, Engine, Request
-from repro.serving.streams import StreamEngine, StreamStats, Verdict
+from repro.serving.grouped import GroupedStreamEngine, ModelGroup
+from repro.serving.streams import (LatencyReservoir, StreamEngine, StreamStats,
+                                   Verdict)
 
 __all__ = ["ContinuousEngine", "CyclicDecoder", "Completion", "Engine",
+           "GroupedStreamEngine", "LatencyReservoir", "ModelGroup",
            "Request", "ServeStats", "StreamEngine", "StreamStats", "Verdict"]

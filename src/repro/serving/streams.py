@@ -89,24 +89,82 @@ class Verdict:
     prob: Optional[float]     # classifier: softmax prob of the predicted class
     latency_s: float          # window-completion -> verdict-on-host wall time
     deadline_miss: bool       # latency_s > deadline_s
-    score: Optional[float] = None       # reconstruction: anomaly score
-    threshold: Optional[float] = None   # reconstruction: calibrated cutoff
+    score: Optional[float] = None       # score heads: anomaly score
+    threshold: Optional[float] = None   # score heads: calibrated cutoff
+    group: Optional[str] = None         # model-group name (grouped fleets)
+
+
+class LatencyReservoir:
+    """Bounded uniform sample of verdict latencies (Vitter's Algorithm R).
+
+    A long-lived fleet engine emits one latency per verdict step forever; an
+    unbounded list leaks O(steps) host memory at millions of cycles.  The
+    reservoir retains the first ``capacity`` samples verbatim (append order
+    preserved, so short runs — tests, bench passes — see an exact list) and
+    thereafter replaces a uniformly random retained sample with probability
+    ``capacity / seen``, keeping the retained set a uniform draw from the
+    whole history — percentile estimates stay statistically valid while
+    memory stays O(capacity).
+
+    List-like where it matters: ``len`` / truthiness / iteration / indexing
+    and slicing cover every pre-reservoir consumer (the detection bench
+    slices per-pass latency tails, which stay exact below ``capacity``).
+    """
+
+    __slots__ = ("capacity", "seen", "_items", "_rng")
+
+    def __init__(self, capacity: int = 4096, seed: int = 0):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.seen = 0                 # total appends ever observed
+        self._items: List[float] = []
+        self._rng = np.random.default_rng(seed)
+
+    def append(self, value: float) -> None:
+        self.seen += 1
+        if len(self._items) < self.capacity:
+            self._items.append(float(value))
+        else:
+            j = int(self._rng.integers(self.seen))
+            if j < self.capacity:
+                self._items[j] = float(value)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def __iter__(self):
+        return iter(self._items)
+
+    def __getitem__(self, idx):
+        return self._items[idx]
+
+    def percentile(self, q: float) -> float:
+        return float(np.percentile(self._items, q)) if self._items else 0.0
 
 
 @dataclasses.dataclass
 class StreamStats:
-    """Aggregate serve accounting (ServeStats conventions)."""
+    """Aggregate serve accounting (ServeStats conventions).
+
+    ``latencies_s`` is a bounded :class:`LatencyReservoir`, not a list: the
+    engine appends one latency per verdict step for the life of the process,
+    and the reservoir keeps ``latency_p`` statistically valid at O(1)
+    memory (exact below its capacity)."""
 
     steps: int                       # jitted detector steps executed
     cycles: int                      # scan cycles ingested
     windows: int                     # verdicts emitted (streams x steps)
     deadline_misses: int
     wall_s: float                    # total time spent inside ingest()
-    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    latencies_s: LatencyReservoir = dataclasses.field(
+        default_factory=LatencyReservoir)
 
     def latency_p(self, q: float) -> float:
-        return float(np.percentile(self.latencies_s, q)) if self.latencies_s \
-            else 0.0
+        return self.latencies_s.percentile(q)
 
     def windows_per_s(self) -> float:
         return self.windows / self.wall_s if self.wall_s > 0 else 0.0
@@ -200,12 +258,26 @@ class StreamEngine:
                  shard: Optional[bool] = None,
                  mesh: Optional[Mesh] = None):
         (input_size,) = model.input_shape
+        # Verdict-head routing: the head's device epilogue is traced into the
+        # jitted step below (sharded and unsharded) and its host epilogue
+        # turns step outputs into Verdict fields — the engine itself no
+        # longer assumes a softmax/argmax classifier.  Constructor-only knob
+        # (like ``fused``): both paths read the captured value, so a
+        # post-construction reassignment of ``.head`` changes neither — the
+        # already-traced step and the host epilogue can never desynchronize.
+        self.head = self._verdict_head = \
+            ClassifierHead() if head is None else head
+        # Window geometry is the head's contract: for every head but
+        # forecast the window IS the model input; the forecast head asks the
+        # ring for one extra reading (its prediction target) and slices the
+        # model input out of the window on device (head.prepare).
         if window is None:
-            window = input_size // n_features
-        if window * n_features != input_size:
+            window = self._verdict_head.ring_window(input_size, n_features)
+        if self._verdict_head.model_input_size(window, n_features) \
+                != input_size:
             raise ValueError(
-                f"window {window} x features {n_features} != model input "
-                f"{input_size}")
+                f"window {window} x features {n_features} (head "
+                f"{self._verdict_head.name!r}) != model input {input_size}")
         if not 1 <= stride:
             raise ValueError("stride must be >= 1")
         self.model = model
@@ -220,23 +292,14 @@ class StreamEngine:
             raise ValueError("norm_mean/norm_std must have one entry per feature")
         self._stack = _layer_stack(model, params)
         self._backend = backend
-        # Verdict-head routing: the head's device epilogue is traced into the
-        # jitted step below (sharded and unsharded) and its host epilogue
-        # turns step outputs into Verdict fields — the engine itself no
-        # longer assumes a softmax/argmax classifier.  Constructor-only knob
-        # (like ``fused``): both paths read the captured value, so a
-        # post-construction reassignment of ``.head`` changes neither — the
-        # already-traced step and the host epilogue can never desynchronize.
-        self.head = self._verdict_head = \
-            ClassifierHead() if head is None else head
         last = self._stack[-1][0]
         n_out = (last["qw"] if "qw" in last else last["w"]).shape[1]
         self._verdict_head.validate(input_size, n_out)
         fusable = ops.model_fusable(model, self._stack)
         if fused and not fusable:
-            raise ValueError(
-                "fused=True but the model is not an all-Dense stack with "
-                "fusable activations")
+            reason = ops.fuse_reason(self._stack) or \
+                "the model graph has non-Dense nodes"
+            raise ValueError(f"fused=True but the model cannot fuse: {reason}")
         # Constructor-only knob: captured as a local so a post-compile
         # mutation of the attribute can't leave already-traced step shapes
         # on a different path than freshly-traced ones.
@@ -297,13 +360,15 @@ class StreamEngine:
             end = (pos + length) % w
             widx = (end + jnp.arange(w)) % w
             win = jnp.take(ring, widx, axis=1).reshape(ring.shape[0], -1)
-            # The head's device epilogue runs inside the jitted step: for a
-            # reconstruction head the (S, input) decode is reduced to an
-            # (S, 1) score HERE, on device — under sharding the host then
-            # gathers one float per stream, never fleet x 400
-            # reconstructions.  (Row-local, so shard_map needs no new
+            # The head's device hooks run inside the jitted step: prepare is
+            # the model-input view of the window (identity except forecast,
+            # which slices off its target reading), and the epilogue reduces
+            # score-head outputs to an (S, 1) score HERE, on device — under
+            # sharding the host then gathers one float per stream, never
+            # fleet x 400 payloads.  (Row-local, so shard_map needs no new
             # collectives.)
-            return ring, verdict_head.epilogue(win, _forward(win))
+            return ring, verdict_head.epilogue(
+                win, _forward(verdict_head.prepare(win)))
 
         if mesh is not None:
             # Each device runs the *whole* step body on its shard — ring

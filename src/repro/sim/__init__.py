@@ -1,24 +1,31 @@
-from repro.sim.detector import (AETrainResult, TrainResult, batched_forward,
-                                build_autoencoder, build_detector,
-                                recalibrate_threshold, train_autoencoder,
-                                train_detector)
-from repro.sim.heads import (ClassifierHead, DetectorHead, ReconstructionHead,
-                             softmax_np)
+from repro.sim.detector import (AETrainResult, ScoreTrainResult, TrainResult,
+                                batched_forward, build_autoencoder,
+                                build_detector, build_forecaster,
+                                build_margin_model, recalibrate_threshold,
+                                score_windows, train_autoencoder,
+                                train_detector, train_forecaster,
+                                train_one_class)
+from repro.sim.heads import (ClassifierHead, DetectorHead, ForecastHead,
+                             MarginHead, ReconstructionHead, ScoreHead,
+                             conservative_quantile, softmax_np)
 from repro.sim.msf import (ATTACK_NAMES, AttackEvent, CascadePID, CycleReading,
                            MSFPlant, PlantParams, PlantStream, SimTrace, adc,
                            build_dataset, make_attack, make_attacks, simulate)
 from repro.sim.scenarios import (SCENARIOS, Scenario, build_fleet,
                                  fleet_readings, get_scenario, jitter_params,
-                                 list_scenarios, register_scenario,
-                                 scenario_table)
+                                 list_scenarios, register_scenario, registered,
+                                 scenario_table, unregister_scenario)
 
-__all__ = ["AETrainResult", "TrainResult", "batched_forward",
-           "build_autoencoder", "build_detector", "recalibrate_threshold",
-           "train_autoencoder",
-           "train_detector", "ClassifierHead", "DetectorHead",
-           "ReconstructionHead", "softmax_np", "ATTACK_NAMES",
+__all__ = ["AETrainResult", "ScoreTrainResult", "TrainResult",
+           "batched_forward", "build_autoencoder", "build_detector",
+           "build_forecaster", "build_margin_model", "recalibrate_threshold",
+           "score_windows", "train_autoencoder", "train_detector",
+           "train_forecaster", "train_one_class", "ClassifierHead",
+           "DetectorHead", "ForecastHead", "MarginHead", "ReconstructionHead",
+           "ScoreHead", "conservative_quantile", "softmax_np", "ATTACK_NAMES",
            "AttackEvent", "CascadePID", "CycleReading", "MSFPlant",
            "PlantParams", "PlantStream", "SimTrace", "adc", "build_dataset",
            "make_attack", "make_attacks", "simulate", "SCENARIOS", "Scenario",
            "build_fleet", "fleet_readings", "get_scenario", "jitter_params",
-           "list_scenarios", "register_scenario", "scenario_table"]
+           "list_scenarios", "register_scenario", "registered",
+           "scenario_table", "unregister_scenario"]

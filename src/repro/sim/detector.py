@@ -33,7 +33,8 @@ from repro.core import layers as L
 from repro.core import sequential
 from repro.core.model import Model, ParamTree
 from repro.kernels import ops
-from repro.sim.heads import ClassifierHead, DetectorHead, ReconstructionHead
+from repro.sim.heads import (ClassifierHead, DetectorHead, ForecastHead,
+                             MarginHead, ReconstructionHead, ScoreHead)
 
 
 def build_detector() -> Model:
@@ -42,6 +43,38 @@ def build_detector() -> Model:
     return sequential(
         [L.Input()] + hidden + [L.Dense(units=spec.CLASSES, activation="linear")],
         (spec.INPUT_SIZE,),
+    )
+
+
+def build_margin_model() -> Model:
+    """The one-class margin body: 400 -> 64 -> 32 -> 16 embedding.
+
+    The §7 hidden trunk with the classifier head cut off — the 16-d linear
+    embedding is what :class:`~repro.sim.heads.MarginHead` measures distance
+    from its benign center in.  All-Dense, so it serves fused.
+    """
+    hidden = [L.Dense(units=h, activation="relu") for h in spec.HIDDEN[:-1]]
+    return sequential(
+        [L.Input()] + hidden
+        + [L.Dense(units=spec.MARGIN_EMBED, activation="linear")],
+        (spec.INPUT_SIZE,),
+    )
+
+
+def build_forecaster() -> Model:
+    """The next-step-prediction body: (W-1) x F = 398 inputs -> one
+    F-feature forecast of the next reading.
+
+    One reading narrower than the serving window — the
+    :class:`~repro.sim.heads.ForecastHead` asks the engine ring for the
+    extra reading and slices the model input off the front of each window.
+    """
+    hidden = [L.Dense(units=h, activation="relu")
+              for h in spec.FORECAST_HIDDEN]
+    return sequential(
+        [L.Input()] + hidden
+        + [L.Dense(units=spec.N_FEATURES, activation="linear")],
+        ((spec.WINDOW - 1) * spec.N_FEATURES,),
     )
 
 
@@ -124,7 +157,11 @@ def _fit_head(
     batched_apply = jax.vmap(model.apply, in_axes=(None, 0))
 
     def loss_fn(p, xb, yb):
-        return head.loss(batched_apply(p, xb), xb, yb)
+        # head.prepare is the model-input view of the training windows (the
+        # identity for every head except forecast, which slices the target
+        # reading off) — the same device-side transform the serving step
+        # applies, so train and serve see identical model inputs.
+        return head.loss(batched_apply(p, head.prepare(xb)), xb, yb)
 
     # Adam (paper's optimizer), moments per leaf.
     @jax.jit
@@ -143,7 +180,8 @@ def _fit_head(
     def val_metric(p, xb, yb):
         # Evaluation goes through the fused whole-MLP path (training's
         # gradient path stays on the vmapped apply above).
-        return head.metric(batched_forward(model, p, xb), xb, yb)
+        return head.metric(batched_forward(model, p, head.prepare(xb)),
+                           xb, yb)
 
     m = jax.tree.map(jnp.zeros_like, params)
     v = jax.tree.map(jnp.zeros_like, params)
@@ -210,27 +248,124 @@ def train_detector(
                               best_val_acc=best_val, test_acc=test_acc)
 
 
+def score_windows(
+    model: Model,
+    params: ParamTree,
+    head: ScoreHead,
+    windows,
+    *,
+    backend: str = "auto",
+) -> np.ndarray:
+    """Per-window anomaly scores of ``head`` over batched ``windows`` —
+    the head's prepare -> fused batched forward -> batch_scores sequence,
+    shared by calibration, detection-rate reporting and tests."""
+    w = jnp.asarray(windows)
+    return np.asarray(head.batch_scores(
+        batched_forward(model, params, head.prepare(w), backend=backend), w))
+
+
 def recalibrate_threshold(
     model: Model,
     params: ParamTree,
     windows,
     *,
+    head: Optional[ScoreHead] = None,
     target_fpr: float = spec.AE_TARGET_FPR,
     backend: str = "auto",
-) -> Tuple[ReconstructionHead, np.ndarray]:
-    """Calibrate a :class:`ReconstructionHead` threshold against THIS
-    model/params' reconstruction scores on held-out **normal** windows.
+) -> Tuple[ScoreHead, np.ndarray]:
+    """Calibrate a :class:`ScoreHead` threshold against THIS model/params'
+    anomaly scores on held-out **normal** windows.
 
     The single source of the score-then-quantile sequence: initial training
     calibration and every re-calibration (post-quantization, post-porting)
     go through here, so the held-out-windows invariant — never calibrate on
-    training windows, they reconstruct optimistically and bias the quantile
-    low — lives in one place.  Returns ``(calibrated_head, scores)``.
+    training windows, they score optimistically and bias the quantile low —
+    lives in one place for every score head (reconstruction, margin,
+    forecast).  ``head`` defaults to an uncalibrated
+    :class:`ReconstructionHead`.  Returns ``(calibrated_head, scores)``.
     """
-    w = jnp.asarray(windows)
-    scores = np.asarray(ReconstructionHead().scores(
-        batched_forward(model, params, w, backend=backend), w))
-    return ReconstructionHead().calibrate(scores, target_fpr), scores
+    head = ReconstructionHead() if head is None else head
+    scores = score_windows(model, params, head, windows, backend=backend)
+    return head.calibrate(scores, target_fpr), scores
+
+
+@dataclasses.dataclass
+class ScoreTrainResult:
+    """Result of the generic unsupervised (score-head) trainer."""
+
+    params: ParamTree
+    history: List[Tuple[int, float, float]]   # (epoch, train_score, -val)
+    best_val: float                           # best validation mean score
+    head: ScoreHead                           # threshold-calibrated
+    threshold: float
+    calib_fpr: float                          # realized FPR on the calib split
+    test_detection_rate: float                # attack windows over threshold
+    calib_windows: np.ndarray                 # the held-out normal split —
+                                              # re-calibrate on THESE (e.g.
+                                              # post-quantization), never on
+                                              # training windows
+
+
+def _split_benign(x, y, batch_size, what):
+    if y is not None:
+        normal = x[np.asarray(y) == 0]
+        attacks = x[np.asarray(y) != 0]
+    else:
+        normal, attacks = x, None
+    if len(normal) < 3 * batch_size:
+        raise ValueError(
+            f"need >= {3 * batch_size} benign windows to train/val/calibrate "
+            f"{what}, got {len(normal)}")
+    return normal, attacks
+
+
+def _train_score_head(
+    model: Model,
+    head: ScoreHead,
+    x: np.ndarray,
+    y: Optional[np.ndarray],
+    *,
+    epochs: int,
+    batch_size: int,
+    lr: float,
+    patience: int,
+    seed: int,
+    splits: Tuple[float, float, float],
+    target_fpr: float,
+) -> ScoreTrainResult:
+    """The shared unsupervised recipe: fit ``head``'s score objective on
+    **benign windows only** (labels, when given, solely drop attack windows
+    — the label-free half of the ICS-defense space), calibrate the verdict
+    threshold to ``target_fpr`` on a held-out normal split the optimizer
+    never saw, and report the detection rate over the dropped attacks."""
+    normal, attacks = _split_benign(x, y, batch_size, f"the {head.name} head")
+    n = len(normal)
+    n_train = int(splits[0] * n)
+    n_val = int(splits[1] * n)
+    x_train = normal[:n_train]
+    x_val = normal[n_train:n_train + n_val]
+    x_calib = normal[n_train + n_val:]        # held-out normal traces
+
+    params, history, best_val = _fit_head(
+        model, head, x_train, None, x_val, None, epochs=epochs,
+        batch_size=batch_size, lr=lr, patience=patience, seed=seed)
+
+    # Threshold calibration: the conservative (1 - target_fpr) quantile of
+    # anomaly score on held-out normal windows the optimizer never touched.
+    head, calib_scores = recalibrate_threshold(model, params, x_calib,
+                                               head=head,
+                                               target_fpr=target_fpr)
+    calib_fpr = float(np.mean(calib_scores > head.threshold))
+
+    detection = 0.0
+    if attacks is not None and len(attacks):
+        attack_scores = score_windows(model, params, head, attacks)
+        detection = float(np.mean(attack_scores > head.threshold))
+
+    return ScoreTrainResult(
+        params=params, history=history, best_val=-best_val, head=head,
+        threshold=head.threshold, calib_fpr=calib_fpr,
+        test_detection_rate=detection, calib_windows=x_calib)
 
 
 def train_autoencoder(
@@ -245,53 +380,85 @@ def train_autoencoder(
     splits: Tuple[float, float, float] = (0.7225, 0.1275, 0.15),
     target_fpr: float = spec.AE_TARGET_FPR,
 ) -> Tuple[Model, AETrainResult]:
-    """The unsupervised detector: train the 400-64-16-64-400 autoencoder on
-    **benign windows only** (labels, when given, are used solely to drop
-    attack windows from training — the label-free half of the ICS-defense
-    space), then calibrate the verdict threshold to ``target_fpr`` false
-    positives on a held-out normal split the optimizer never saw.
+    """The unsupervised reconstruction detector: the 400-64-16-64-400
+    autoencoder under the shared score-head recipe (benign-only MSE,
+    held-out FPR calibration — :func:`_train_score_head`).
 
     Returns the model plus an :class:`AETrainResult` whose ``head`` is the
     calibrated :class:`ReconstructionHead` to serve with
     (``StreamEngine(model, params, head=result.head, ...)``).
     """
-    head = ReconstructionHead()
-    if y is not None:
-        normal = x[np.asarray(y) == 0]
-        attacks = x[np.asarray(y) != 0]
-    else:
-        normal, attacks = x, None
-    if len(normal) < 3 * batch_size:
-        raise ValueError(
-            f"need >= {3 * batch_size} benign windows to train/val/calibrate "
-            f"the autoencoder, got {len(normal)}")
-
     model = build_autoencoder()
-    n = len(normal)
-    n_train = int(splits[0] * n)
-    n_val = int(splits[1] * n)
-    x_train = normal[:n_train]
-    x_val = normal[n_train:n_train + n_val]
-    x_calib = normal[n_train + n_val:]        # held-out normal traces
-
-    params, history, best_val = _fit_head(
-        model, head, x_train, None, x_val, None, epochs=epochs,
-        batch_size=batch_size, lr=lr, patience=patience, seed=seed)
-
-    # Threshold calibration: the (1 - target_fpr) quantile of reconstruction
-    # error on held-out normal windows the optimizer never touched.
-    head, calib_scores = recalibrate_threshold(model, params, x_calib,
-                                               target_fpr=target_fpr)
-    calib_fpr = float(np.mean(calib_scores > head.threshold))
-
-    detection = 0.0
-    if attacks is not None and len(attacks):
-        attack_scores = np.asarray(ReconstructionHead().scores(
-            batched_forward(model, params, jnp.asarray(attacks)),
-            jnp.asarray(attacks)))
-        detection = float(np.mean(attack_scores > head.threshold))
-
+    res = _train_score_head(
+        model, ReconstructionHead(), x, y, epochs=epochs,
+        batch_size=batch_size, lr=lr, patience=patience, seed=seed,
+        splits=splits, target_fpr=target_fpr)
     return model, AETrainResult(
-        params=params, history=history, best_val_mse=-best_val, head=head,
-        threshold=head.threshold, calib_fpr=calib_fpr,
-        test_detection_rate=detection, calib_windows=x_calib)
+        params=res.params, history=res.history, best_val_mse=res.best_val,
+        head=res.head, threshold=res.threshold, calib_fpr=res.calib_fpr,
+        test_detection_rate=res.test_detection_rate,
+        calib_windows=res.calib_windows)
+
+
+def train_one_class(
+    x: np.ndarray,
+    y: Optional[np.ndarray] = None,
+    *,
+    epochs: int = 60,
+    batch_size: int = 256,
+    lr: float = 1e-3,
+    patience: int = 8,
+    seed: int = 0,
+    splits: Tuple[float, float, float] = (0.7225, 0.1275, 0.15),
+    target_fpr: float = spec.AE_TARGET_FPR,
+) -> Tuple[Model, ScoreTrainResult]:
+    """The one-class margin detector (Deep-SVDD-style): embed windows with
+    the §7 trunk (:func:`build_margin_model`), fix the center at the mean
+    *initial* embedding of the benign training windows (the standard SVDD
+    center init — a trainable center collapses), then minimize the mean
+    squared distance of benign embeddings from it.  The calibrated
+    threshold is the margin radius.
+    """
+    model = build_margin_model()
+    normal, _ = _split_benign(x, y, batch_size, "the margin head")
+    # Center from the untrained embedding of benign windows; freezing it
+    # before optimization is what makes "pull everything to the center" a
+    # non-degenerate objective.
+    n_train = int(splits[0] * len(normal))
+    init_params = model.init_params(jax.random.PRNGKey(seed))
+    emb = batched_forward(model, init_params,
+                          jnp.asarray(normal[:n_train]))
+    center = tuple(float(c) for c in np.asarray(jnp.mean(emb, axis=0)))
+    res = _train_score_head(
+        model, MarginHead(center=center), x, y, epochs=epochs,
+        batch_size=batch_size, lr=lr, patience=patience, seed=seed,
+        splits=splits, target_fpr=target_fpr)
+    return model, res
+
+
+def train_forecaster(
+    x: np.ndarray,
+    y: Optional[np.ndarray] = None,
+    *,
+    epochs: int = 60,
+    batch_size: int = 256,
+    lr: float = 1e-3,
+    patience: int = 8,
+    seed: int = 0,
+    splits: Tuple[float, float, float] = (0.7225, 0.1275, 0.15),
+    target_fpr: float = spec.AE_TARGET_FPR,
+) -> Tuple[Model, ScoreTrainResult]:
+    """The next-step-prediction detector: :func:`build_forecaster` maps each
+    window's first W-1 readings to a forecast of the W-th (the
+    :class:`~repro.sim.heads.ForecastHead` owns the slicing), trained on
+    benign windows so attacks surface as unforecastable transitions.
+
+    ``x`` rows are FULL ``spec.INPUT_SIZE`` windows — the same dataset the
+    other detectors train on; the head carves input and target out of each.
+    """
+    model = build_forecaster()
+    res = _train_score_head(
+        model, ForecastHead(n_features=spec.N_FEATURES), x, y, epochs=epochs,
+        batch_size=batch_size, lr=lr, patience=patience, seed=seed,
+        splits=splits, target_fpr=target_fpr)
+    return model, res

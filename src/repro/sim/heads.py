@@ -4,31 +4,53 @@ The §7 case study hardwired one head — a 2-class softmax classifier (CE loss,
 argmax verdict) — into three layers at once: training (`sim.detector`),
 serving (`serving.streams`' inlined softmax/argmax epilogue) and the fused
 kernel contract.  The dominant ICS-defense pattern is *unsupervised* anomaly
-detection (train on benign traffic only, flag by reconstruction error), which
+detection (train on benign traffic only, flag by an anomaly score), which
 shares the whole MLP body / fused-kernel / fleet-serving machinery and differs
 only in the head.  This module makes the head a first-class object:
 
 * :class:`ClassifierHead` — supervised: sparse-CE loss over labeled windows,
   verdict = argmax class with its softmax probability.
 * :class:`ReconstructionHead` — unsupervised: MSE loss on benign windows
-  only, anomaly score = per-window mean squared reconstruction error,
-  verdict = score > threshold, the threshold calibrated to a target
-  false-positive rate on held-out normal traces.
+  only, anomaly score = per-window mean squared reconstruction error.
+* :class:`MarginHead` — unsupervised one-class margin (Deep-SVDD-style):
+  the body embeds a window near a fixed benign ``center``; the anomaly
+  score is the mean squared distance of the embedding from the center, and
+  the calibrated threshold is the margin radius.
+* :class:`ForecastHead` — unsupervised next-step prediction: the body maps
+  the window's first ``W - 1`` readings to a forecast of the ``W``-th; the
+  anomaly score is the squared forecast error against the reading that
+  actually arrived.  The head owns the window/model-width asymmetry: it
+  asks the engine for one extra ring reading (:meth:`ring_window`) and
+  slices the model's input off the front of the window (:meth:`prepare`).
 
-A head contributes three things:
+A head contributes:
 
 1. ``loss(outputs, x, y)`` — the training objective (``sim.detector``'s
    head-generic Adam loop calls it on batched model outputs).
-2. ``epilogue(win, out)`` — the **device-side** verdict reduction, traced
-   into the engine's jitted step (sharded and unsharded): for the classifier
-   it is the identity on the logits; for reconstruction it reduces the
-   (S, 400) reconstructions to an (S, 1) score **on device**, so the host
-   never materializes fleet x 400 reconstructions.
-3. ``host_verdicts(out)`` — the host-side epilogue turning the step output
+2. ``prepare(win)`` — the **device-side** model-input view of the window
+   (identity for every head except forecast), applied before the forward
+   both in training and inside the engine's jitted step.
+3. ``epilogue(win, out)`` — the **device-side** verdict reduction, traced
+   into the engine's jitted step (sharded and unsharded): score heads reduce
+   the (S, out) model outputs to an (S, 1) score **on device**, so the host
+   never materializes fleet x out_width payloads.
+4. ``host_verdicts(out)`` — the host-side epilogue turning the step output
    into per-stream ``(pred, prob, score, threshold)`` verdict fields.
+5. ``ring_window(input_size, n_features)`` / ``model_input_size(window,
+   n_features)`` — the window-geometry contract between the serving ring
+   and the model input (identity-coupled for every head except forecast).
 
 Heads are stream-local (row-wise), so the epilogue rides through
-``shard_map`` untouched — the fleet mesh sees zero new collectives.
+``shard_map`` untouched — the fleet mesh sees zero new collectives, and a
+heterogeneous model-group fleet (``serving.grouped``) mixes heads freely.
+
+**Threshold calibration** (every :class:`ScoreHead`) uses the *conservative*
+empirical quantile (``np.quantile(..., method="higher")``): the cutoff is an
+actual calibration score at or above the interpolated position, so the
+realized false-positive rate **on the calibration set itself** never exceeds
+``target_fpr``.  (The default linear interpolation can place the cutoff
+*between* order statistics on small calibration sets, letting the empirical
+FPR overshoot the target it was calibrated to.)
 """
 
 from __future__ import annotations
@@ -50,6 +72,15 @@ def softmax_np(logits: np.ndarray) -> np.ndarray:
     return e / e.sum(axis=-1, keepdims=True)
 
 
+def conservative_quantile(scores: np.ndarray, target_fpr: float) -> float:
+    """The ``(1 - target_fpr)`` empirical quantile, rounded UP to an actual
+    order statistic (``method="higher"``), so ``mean(scores > q)`` — the
+    realized FPR on the calibration scores themselves — is ≤ ``target_fpr``
+    even on small calibration sets."""
+    return float(np.quantile(np.asarray(scores, np.float64), 1.0 - target_fpr,
+                             method="higher"))
+
+
 class DetectorHead:
     """Base: the loss / device epilogue / host verdict of one workload."""
 
@@ -69,6 +100,28 @@ class DetectorHead:
     def validate(self, input_size: int, n_outputs: int) -> None:
         """Raise early (engine construction) if the model can't carry this
         head; the default accepts any output width."""
+
+    def ring_window(self, input_size: int, n_features: int) -> int:
+        """Ring readings per verdict window for a model of ``input_size``.
+        Default: the window IS the model input (``input_size / n_features``
+        readings); the forecast head asks for one extra reading (the
+        prediction target)."""
+        if input_size % n_features:
+            raise ValueError(
+                f"model input {input_size} is not a whole number of "
+                f"{n_features}-feature readings")
+        return input_size // n_features
+
+    def model_input_size(self, window: int, n_features: int) -> int:
+        """Model input width for a ``window``-reading ring — the inverse of
+        :meth:`ring_window`, used to validate an explicit ``window=``."""
+        return window * n_features
+
+    def prepare(self, win: jax.Array) -> jax.Array:
+        """Device-side model-input view of the batched ``(S, window x F)``
+        window; traced into the jitted step *and* the training loop.  The
+        default feeds the whole window."""
+        return win
 
     def epilogue(self, win: jax.Array, out: jax.Array) -> jax.Array:
         """Device-side reduction from raw model outputs to the per-stream
@@ -107,7 +160,73 @@ class ClassifierHead(DetectorHead):
 
 
 @dataclasses.dataclass(frozen=True)
-class ReconstructionHead(DetectorHead):
+class ScoreHead(DetectorHead):
+    """Base for score-vs-threshold heads (every unsupervised workload).
+
+    Subclasses define :meth:`batch_scores` — per-window anomaly scores from
+    batched model outputs — and inherit the whole training objective
+    (mean score on benign windows), device epilogue ((S, 1) on-device score
+    reduction), host verdict (strict ``score > threshold``) and conservative
+    FPR calibration.
+
+    ``threshold`` is None until calibrated (:meth:`calibrate` /
+    the ``sim.detector`` trainers); serving requires it.
+    """
+
+    threshold: Optional[float] = None
+    name: str = "score"
+
+    def batch_scores(self, outputs: jax.Array, x: jax.Array) -> jax.Array:
+        """Per-window anomaly scores ``(B,)`` from batched model outputs
+        (``x`` is the full window batch, pre-:meth:`prepare`)."""
+        raise NotImplementedError
+
+    def loss(self, outputs, x, y):
+        return jnp.mean(self.batch_scores(outputs, x))
+
+    def metric(self, outputs, x, y):
+        # Lower anomaly score on benign data is better; the trainer maximizes.
+        return -self.loss(outputs, x, y)
+
+    def validate(self, input_size: int, n_outputs: int) -> None:
+        if self.threshold is None:
+            raise ValueError(
+                f"{type(self).__name__} has no threshold; calibrate it on "
+                "held-out normal traces first (head.calibrate / the "
+                "sim.detector trainers)")
+
+    def epilogue(self, win, out):
+        # On-device score reduction: (S, out) model outputs -> (S, 1) scores
+        # before anything leaves the device, so a sharded fleet ships one
+        # float per stream to the host rather than the full payload.
+        return self.batch_scores(out, win)[:, None]
+
+    def calibrate(self, normal_scores: np.ndarray,
+                  target_fpr: float) -> "ScoreHead":
+        """A new head whose threshold realizes at most ``target_fpr`` false
+        positives on the given held-out *normal* window scores (conservative
+        order-statistic cutoff — module docstring)."""
+        if not 0.0 < target_fpr < 1.0:
+            raise ValueError(f"target_fpr must be in (0, 1), got {target_fpr}")
+        scores = np.asarray(normal_scores, np.float64)
+        if scores.size == 0:
+            raise ValueError("cannot calibrate on zero normal scores")
+        return dataclasses.replace(
+            self, threshold=conservative_quantile(scores, target_fpr))
+
+    def host_verdicts(self, out):
+        if self.threshold is None:
+            raise ValueError(
+                f"{type(self).__name__} has no threshold; calibrate it on "
+                "held-out normal traces first (head.calibrate / the "
+                "sim.detector trainers)")
+        score = out[:, 0] if out.ndim == 2 else out
+        pred = (score > self.threshold).astype(np.int64)
+        return pred, None, score, self.threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconstructionHead(ScoreHead):
     """Unsupervised autoencoder: MSE loss on benign windows, anomaly score =
     per-window mean squared reconstruction error, verdict = score exceeding
     a threshold calibrated to ``target_fpr`` on held-out normal traces.
@@ -116,55 +235,97 @@ class ReconstructionHead(DetectorHead):
     ``sim.detector.train_autoencoder``); serving requires it.
     """
 
-    threshold: Optional[float] = None
     name: str = "reconstruction"
-
-    def loss(self, outputs, x, y):
-        return jnp.mean(self.scores(outputs, x))
-
-    def metric(self, outputs, x, y):
-        # Lower reconstruction error is better; the trainer maximizes.
-        return -self.loss(outputs, x, y)
 
     def validate(self, input_size: int, n_outputs: int) -> None:
         if n_outputs != input_size:
             raise ValueError(
                 f"ReconstructionHead needs an autoencoder whose output width "
                 f"({n_outputs}) equals its input width ({input_size})")
-        if self.threshold is None:
-            raise ValueError(
-                "ReconstructionHead has no threshold; calibrate it on "
-                "held-out normal traces first (head.calibrate / "
-                "sim.detector.train_autoencoder)")
+        super().validate(input_size, n_outputs)
 
-    def epilogue(self, win, out):
-        # On-device score reduction: (S, 400) reconstructions -> (S, 1)
-        # errors before anything leaves the device, so a sharded fleet ships
-        # one float per stream to the host rather than the full decode.
-        return self.scores(out, win)[:, None]
+    def batch_scores(self, outputs, x):
+        return jnp.mean(jnp.square(outputs - x), axis=-1)
 
     def scores(self, recon: jax.Array, x: jax.Array) -> jax.Array:
         """Per-window anomaly scores from batched reconstructions."""
-        return jnp.mean(jnp.square(recon - x), axis=-1)
+        return self.batch_scores(recon, x)
 
-    def calibrate(self, normal_scores: np.ndarray,
-                  target_fpr: float) -> "ReconstructionHead":
-        """A new head whose threshold yields ``target_fpr`` false positives
-        on the given held-out *normal* window scores."""
-        if not 0.0 < target_fpr < 1.0:
-            raise ValueError(f"target_fpr must be in (0, 1), got {target_fpr}")
-        scores = np.asarray(normal_scores, np.float64)
-        if scores.size == 0:
-            raise ValueError("cannot calibrate on zero normal scores")
-        thr = float(np.quantile(scores, 1.0 - target_fpr))
-        return dataclasses.replace(self, threshold=thr)
 
-    def host_verdicts(self, out):
-        if self.threshold is None:
+@dataclasses.dataclass(frozen=True)
+class MarginHead(ScoreHead):
+    """Unsupervised one-class margin (Deep-SVDD-style): the model embeds a
+    window; benign training pulls embeddings toward a fixed ``center`` (the
+    mean initial embedding of benign windows — ``sim.detector.
+    train_one_class`` computes it), and the anomaly score is the mean
+    squared distance from it.  The calibrated ``threshold`` is the margin
+    radius: scores beyond it are flagged.
+    """
+
+    center: Optional[Tuple[float, ...]] = None
+    name: str = "margin"
+
+    def _center(self) -> jax.Array:
+        return jnp.asarray(self.center, jnp.float32)
+
+    def validate(self, input_size: int, n_outputs: int) -> None:
+        if self.center is None:
             raise ValueError(
-                "ReconstructionHead has no threshold; calibrate it on "
-                "held-out normal traces first (head.calibrate / "
-                "sim.detector.train_autoencoder)")
-        score = out[:, 0] if out.ndim == 2 else out
-        pred = (score > self.threshold).astype(np.int64)
-        return pred, None, score, self.threshold
+                "MarginHead has no center; fit one on benign windows first "
+                "(sim.detector.train_one_class)")
+        if len(self.center) != n_outputs:
+            raise ValueError(
+                f"MarginHead center has {len(self.center)} dims but the "
+                f"model embeds into {n_outputs}")
+        super().validate(input_size, n_outputs)
+
+    def batch_scores(self, outputs, x):
+        return jnp.mean(jnp.square(outputs - self._center()), axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ForecastHead(ScoreHead):
+    """Unsupervised next-step prediction: the model maps the window's first
+    ``W - 1`` readings to a forecast of the ``W``-th, and the anomaly score
+    is the mean squared forecast error against the reading that actually
+    arrived — physics violations surface as unforecastable transitions.
+
+    The head owns the geometry asymmetry: the serving ring holds one more
+    reading than the model consumes (:meth:`ring_window`), and
+    :meth:`prepare` slices the model input off the front of each window —
+    on device, inside the jitted step, for training and serving alike.
+    """
+
+    n_features: int = 2
+    name: str = "forecast"
+
+    def ring_window(self, input_size: int, n_features: int) -> int:
+        if n_features != self.n_features:
+            raise ValueError(
+                f"ForecastHead was built for {self.n_features} features, "
+                f"engine has {n_features}")
+        if input_size % n_features:
+            raise ValueError(
+                f"forecast model input {input_size} is not a whole number "
+                f"of {n_features}-feature readings")
+        # One extra ring reading: the model eats W-1 readings, the W-th is
+        # the forecast target.
+        return input_size // n_features + 1
+
+    def model_input_size(self, window: int, n_features: int) -> int:
+        return (window - 1) * n_features
+
+    def prepare(self, win):
+        return win[..., :-self.n_features]
+
+    def validate(self, input_size: int, n_outputs: int) -> None:
+        if n_outputs != self.n_features:
+            raise ValueError(
+                f"ForecastHead predicts one {self.n_features}-feature "
+                f"reading but the model outputs {n_outputs}")
+        super().validate(input_size, n_outputs)
+
+    def batch_scores(self, outputs, x):
+        # x is the FULL window batch; the target is its last reading.
+        return jnp.mean(
+            jnp.square(outputs - x[..., -self.n_features:]), axis=-1)

@@ -17,6 +17,7 @@ the detector was calibrated on while transients differ per plant.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -95,6 +96,7 @@ _ALL = [
 
 SCENARIOS: Dict[str, Scenario] = {s.name: s for s in _ALL}
 assert len(SCENARIOS) == len(_ALL), "duplicate scenario name"
+_BUILTIN = frozenset(SCENARIOS)     # the library core, never unregistrable
 
 
 def list_scenarios() -> List[str]:
@@ -110,11 +112,50 @@ def get_scenario(name: str) -> Scenario:
 
 
 def register_scenario(scenario: Scenario) -> Scenario:
-    """Add a user-defined scenario to the library (name must be fresh)."""
+    """Add a user-defined scenario to the library (name must be fresh).
+
+    Registration mutates the process-global ``SCENARIOS`` dict; pair it
+    with :func:`unregister_scenario`, or use the :func:`registered` context
+    manager so the entry cannot leak across tests and sessions.
+    """
     if scenario.name in SCENARIOS:
         raise ValueError(f"scenario {scenario.name!r} already registered")
     SCENARIOS[scenario.name] = scenario
     return scenario
+
+
+def unregister_scenario(name: str) -> Scenario:
+    """Remove a previously registered scenario and return it.
+
+    Built-in library scenarios are protected — the fleet builders and the
+    example CLI assume they exist for the life of the process.
+    """
+    if name in _BUILTIN:
+        raise ValueError(f"scenario {name!r} is a built-in library scenario "
+                         "and cannot be unregistered")
+    try:
+        return SCENARIOS.pop(name)
+    except KeyError:
+        raise KeyError(
+            f"scenario {name!r} is not registered; known: "
+            f"{', '.join(SCENARIOS)}")
+
+
+@contextlib.contextmanager
+def registered(*scenarios: Scenario):
+    """Scoped registration: the scenarios exist inside the ``with`` block
+    and are removed on exit — even on error, and even if the block itself
+    already unregistered some of them.  The sanctioned way for tests and
+    ad-hoc drivers to extend the library without leaking global state."""
+    added: List[str] = []
+    try:
+        for sc in scenarios:
+            register_scenario(sc)
+            added.append(sc.name)
+        yield scenarios[0] if len(scenarios) == 1 else scenarios
+    finally:
+        for name in added:
+            SCENARIOS.pop(name, None)
 
 
 def build_fleet(

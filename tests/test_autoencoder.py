@@ -99,6 +99,38 @@ class TestReconstructionHead:
         tighter = ReconstructionHead().calibrate(scores, target_fpr=0.01)
         assert tighter.threshold > head.threshold
 
+    def test_small_sample_calibration_fpr_never_exceeds_target(self):
+        """Satellite regression: quantile interpolation used to let the
+        calibration-set FPR land ABOVE target_fpr on small score sets (an
+        interpolated threshold sits below the next order statistic, so the
+        strict > comparison flags more than target_fpr of the very windows
+        it was calibrated on).  The conservative (method='higher') quantile
+        guarantees realized FPR <= target on the calibration set itself —
+        for every small-set size and target."""
+        rng = np.random.default_rng(0)
+        for n in (5, 7, 13, 50, 99):
+            for target in (0.01, 0.05, 0.1, 0.25):
+                scores = rng.normal(size=n) ** 2
+                head = ReconstructionHead().calibrate(scores,
+                                                      target_fpr=target)
+                realized = np.mean(scores > head.threshold)
+                assert realized <= target, (n, target, realized)
+                # the threshold is an actual observed score, never an
+                # interpolated value between two of them
+                assert head.threshold in scores
+
+    def test_conservative_quantile_shared_by_all_score_heads(self):
+        """Margin and forecast heads calibrate through the same
+        conservative quantile (the fix is in the ScoreHead base, not
+        patched per head)."""
+        from repro.sim import ForecastHead, MarginHead, conservative_quantile
+        scores = np.array([0.1, 0.2, 0.3, 0.4, 0.5])
+        want = conservative_quantile(scores, 0.25)
+        assert want == 0.4
+        for head in (MarginHead(center=(0.0,)), ForecastHead(),
+                     ReconstructionHead()):
+            assert head.calibrate(scores, 0.25).threshold == want
+
     def test_calibrate_validation(self):
         with pytest.raises(ValueError):
             ReconstructionHead().calibrate(np.ones(4), target_fpr=0.0)

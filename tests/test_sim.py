@@ -8,8 +8,10 @@ import pytest
 from repro.sim import build_dataset, simulate
 from repro.sim.msf import (ATTACK_NAMES, AttackEvent, PlantParams, PlantStream,
                            adc, make_attack, make_attacks)
-from repro.sim.scenarios import (SCENARIOS, build_fleet, get_scenario,
-                                 jitter_params, list_scenarios)
+from repro.sim.scenarios import (SCENARIOS, Scenario, build_fleet,
+                                 get_scenario, jitter_params, list_scenarios,
+                                 register_scenario, registered,
+                                 unregister_scenario)
 
 
 class TestPlant:
@@ -121,6 +123,64 @@ class TestAttackSchedule:
         got = np.array([stream.step().wd_meas for _ in range(400)])
         want = simulate(400, events=events, seed=7).wd_meas
         np.testing.assert_array_equal(got, want)
+
+
+class TestScenarioRegistration:
+    """Satellite: register_scenario finally has a removal path — no test or
+    driver needs to leak entries into the process-global library."""
+
+    def _custom(self, name="custom-probe"):
+        return Scenario(name=name, description="test-only",
+                        events=(AttackEvent(1, start=300),))
+
+    def test_register_unregister_round_trip(self):
+        sc = register_scenario(self._custom())
+        try:
+            assert get_scenario(sc.name) is sc
+        finally:
+            assert unregister_scenario(sc.name) is sc
+        assert sc.name not in SCENARIOS
+        with pytest.raises(KeyError):
+            unregister_scenario(sc.name)
+
+    def test_builtin_scenarios_protected(self):
+        with pytest.raises(ValueError, match="built-in"):
+            unregister_scenario("baseline")
+        assert "baseline" in SCENARIOS
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_scenario(self._custom("baseline"))
+
+    def test_registered_context_manager(self):
+        before = set(SCENARIOS)
+        with registered(self._custom()) as sc:
+            assert get_scenario("custom-probe") is sc
+            # usable by the fleet builders inside the scope
+            fleet = build_fleet(["custom-probe"], 2, seed=0)
+            assert all(p.name.startswith("custom-probe#") for p in fleet)
+        assert set(SCENARIOS) == before
+
+    def test_registered_cleans_up_on_error_and_multi(self):
+        before = set(SCENARIOS)
+        with pytest.raises(RuntimeError):
+            with registered(self._custom("a-probe"), self._custom("b-probe")) \
+                    as (a, b):
+                assert a.name == "a-probe" and b.name == "b-probe"
+                raise RuntimeError("boom")
+        assert set(SCENARIOS) == before
+        # a clashing second registration unwinds the first
+        with pytest.raises(ValueError):
+            with registered(self._custom("a-probe"),
+                            self._custom("baseline")):
+                pass                             # pragma: no cover
+        assert set(SCENARIOS) == before
+
+    def test_registered_tolerates_inner_unregister(self):
+        before = set(SCENARIOS)
+        with registered(self._custom()) as sc:
+            unregister_scenario(sc.name)
+        assert set(SCENARIOS) == before
 
 
 class TestScenarioLibrary:

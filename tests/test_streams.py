@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from _hyp import given, settings, st
 from repro.core import layers as L
 from repro.core import quantize, sequential
-from repro.serving import StreamEngine
+from repro.serving import LatencyReservoir, StreamEngine
 from repro.sim import build_detector, build_fleet
 
 
@@ -200,6 +200,64 @@ class TestDetectorServing:
         for v in verdicts:
             assert v.pred in (0, 1) and 0.0 <= v.prob <= 1.0
             assert (v.latency_s > eng.deadline_s) == v.deadline_miss
+
+
+class TestLatencyReservoir:
+    """Satellite regression: StreamStats.latencies_s used to be an unbounded
+    list — one float per verdict step for the life of the engine.  The
+    reservoir must hold memory at O(capacity) while keeping latency_p
+    statistically valid, and stay an EXACT ordered list below capacity
+    (the detection bench slices per-pass latency tails)."""
+
+    def test_memory_bounded_at_100k_appends(self):
+        r = LatencyReservoir(capacity=512)
+        for i in range(100_000):
+            r.append(float(i))
+        assert len(r) == 512
+        assert len(r._items) == 512              # nothing hides elsewhere
+        assert r.seen == 100_000
+
+    def test_exact_and_ordered_below_capacity(self):
+        r = LatencyReservoir(capacity=64)
+        vals = [float(v) for v in np.random.default_rng(0).normal(size=40)]
+        for v in vals:
+            r.append(v)
+        assert list(r) == vals
+        assert r[10:20] == vals[10:20]           # bench tail-slicing contract
+        assert r.percentile(50) == np.percentile(vals, 50)
+
+    def test_percentiles_stay_valid_past_capacity(self):
+        """Uniform reservoir over 0..99999: quantile estimates must land
+        near the true stream quantiles, not near the tail the naive
+        'keep the last N' policy would see."""
+        r = LatencyReservoir(capacity=2048, seed=1)
+        for i in range(100_000):
+            r.append(float(i))
+        for q in (25, 50, 75, 99):
+            assert abs(r.percentile(q) - q * 1000.0) < 5000.0
+
+    def test_validation_and_empty(self):
+        with pytest.raises(ValueError):
+            LatencyReservoir(capacity=0)
+        r = LatencyReservoir()
+        assert len(r) == 0 and not r and r.percentile(99) == 0.0
+
+    def test_engine_stats_hold_memory_over_long_serve(self):
+        """The engine-level invariant: steps can exceed the reservoir
+        capacity without latencies_s growing past it."""
+        model, params = identity_probe(3, 2)
+        eng = StreamEngine(model, params, n_streams=2, n_features=2,
+                           window=3, stride=1,
+                           norm_mean=(0.0, 0.0), norm_std=(1.0, 1.0))
+        eng.stats.latencies_s = LatencyReservoir(capacity=16)
+        readings = np.random.default_rng(0).normal(
+            size=(60, 2, 2)).astype(np.float32)
+        for c in range(60):
+            eng.ingest(readings[c])
+        assert eng.stats.steps == 58             # windows at cycles 3..60
+        assert len(eng.stats.latencies_s) == 16
+        assert eng.stats.latencies_s.seen == 58
+        assert eng.stats.latency_p(99) >= eng.stats.latency_p(50) > 0
 
 
 @pytest.mark.slow
