@@ -114,14 +114,18 @@ def run_engine_pair(model, params, readings, *, stride: int,
         walls = {}
         for fused in order:
             eng = engines[fused]
-            w0, l0 = eng.stats.windows, len(eng.stats.latencies_s)
+            w0 = eng.stats.windows
+            # Per-pass latency tails come from a per-pass reservoir swap:
+            # tail *slices* are silently wrong (and now raise) once the
+            # reservoir passes capacity and Algorithm R shuffles retention.
+            eng.stats.reset_latencies()
             t0 = time.perf_counter()
             for c in range(n_cycles):
                 eng.ingest(readings[c])
             wall = time.perf_counter() - t0
             windows = eng.stats.windows - w0
             walls[fused] = wall
-            lats = eng.stats.latencies_s[l0:]
+            lats = list(eng.stats.latencies_s)
             if best[fused] is None or wall / max(windows, 1) < \
                     best[fused][1] / max(best[fused][0], 1):
                 best[fused] = (windows, wall,
@@ -241,24 +245,25 @@ def run_grouped_pair(detectors, readings, *, stride: int,
         walls = {}
         for kind in order:
             if kind == "grouped":
-                w0, l0 = ge.stats.windows, len(ge.stats.latencies_s)
+                w0 = ge.stats.windows
+                ge.stats.reset_latencies()   # per-pass reservoir swap
                 t0 = time.perf_counter()
                 for c in range(n_cycles):
                     ge.ingest(readings[c])
                 wall = time.perf_counter() - t0
                 windows = ge.stats.windows - w0
-                lats = list(ge.stats.latencies_s[l0:])
+                lats = list(ge.stats.latencies_s)
             else:
                 w0 = sum(e.stats.windows for _, e in splits)
-                l0s = [len(e.stats.latencies_s) for _, e in splits]
+                for _, eng in splits:
+                    eng.stats.reset_latencies()
                 t0 = time.perf_counter()
                 for c in range(n_cycles):
                     for off, eng in splits:
                         eng.ingest(readings[c][off:off + n_per])
                 wall = time.perf_counter() - t0
                 windows = sum(e.stats.windows for _, e in splits) - w0
-                lats = [v for (_, e), l0_ in zip(splits, l0s)
-                        for v in e.stats.latencies_s[l0_:]]
+                lats = [v for _, e in splits for v in e.stats.latencies_s]
             walls[kind] = wall
             if best[kind] is None or wall / max(windows, 1) < \
                     best[kind][1] / max(best[kind][0], 1):
@@ -266,6 +271,53 @@ def run_grouped_pair(detectors, readings, *, stride: int,
                               float(np.percentile(lats, 99)) if lats else 0.0)
         ratios.append(walls["split"] / walls["grouped"])
     best["ratio"] = float(np.median(ratios))
+    return best
+
+
+def run_drift_pair(model, params, readings, *, stride: int,
+                   head, reps: int = 12) -> dict:
+    """Adaptive (streaming-threshold) vs frozen-threshold engines over a
+    *drifting* fleet, interleaved-pass discipline (run_engine_pair
+    conventions).  The rows answer two questions: what the per-step calib
+    maintenance + host recalibration costs (``vs_fixed`` paired ratio, both
+    engines run the same fused step otherwise) and whether the live
+    threshold actually leaves the frozen calibration point on drifted
+    readings (``live_thr`` in derived).  Returns {False: fixed triple,
+    True: adaptive triple, "ratio": r, "live_thr": t}."""
+    n_cycles, n_streams, _ = readings.shape
+    engines = {}
+    for adaptive in (False, True):
+        eng = StreamEngine(model, params, n_streams=n_streams, stride=stride,
+                           fused=True, head=head,
+                           adapt=adaptive or None)
+        eng.warmup()
+        for c in range(min(spec.WINDOW, n_cycles)):
+            eng.ingest(readings[c % n_cycles])
+        engines[adaptive] = eng
+    best = {False: None, True: None}
+    ratios = []
+    for rep in range(reps):
+        order = (False, True) if rep % 2 == 0 else (True, False)
+        walls = {}
+        for adaptive in order:
+            eng = engines[adaptive]
+            w0 = eng.stats.windows
+            eng.stats.reset_latencies()
+            t0 = time.perf_counter()
+            for c in range(n_cycles):
+                eng.ingest(readings[c])
+            wall = time.perf_counter() - t0
+            windows = eng.stats.windows - w0
+            walls[adaptive] = wall
+            lats = list(eng.stats.latencies_s)
+            if best[adaptive] is None or wall / max(windows, 1) < \
+                    best[adaptive][1] / max(best[adaptive][0], 1):
+                best[adaptive] = (windows, wall,
+                                  float(np.percentile(lats, 99)) if lats
+                                  else 0.0)
+        ratios.append(walls[False] / walls[True])   # = wps_adapt / wps_fixed
+    best["ratio"] = float(np.median(ratios))
+    best["live_thr"] = engines[True].live_threshold
     return best
 
 
@@ -477,6 +529,36 @@ def main(quick: bool = False, n_streams: int = 16, n_cycles: int = 0):
         print(f"# grouped {scheme}: {wps['grouped']:.0f} vs split "
               f"{wps['split']:.0f} windows/s "
               f"(paired ratio {pair['ratio']:.2f}x)")
+
+    # Drift-adaptation rows (detect_drift_*): the autoencoder engine over a
+    # *drifting* fleet (seasonal-drift scenario — benign flash-gain decay
+    # plus warming seawater), streaming-threshold adaptive engine vs the
+    # frozen-threshold engine in interleaved passes.  --quick keeps SINT so
+    # the CI artifact always carries a drift row.
+    drift_head = ReconstructionHead(threshold=BENCH_AE_THRESHOLD,
+                                    target_fpr=0.05)
+    drift_readings = fleet_readings(n_streams, n_cycles,
+                                    names=["seasonal-drift"], seed=3)
+    ae_by_scheme = dict(ae_variants)
+    for scheme in grouped_schemes:
+        pair = run_drift_pair(ae_model, ae_by_scheme[scheme], drift_readings,
+                              stride=stride, head=drift_head)
+        wps = {}
+        for adaptive, suffix in ((False, "fixed"), (True, "")):
+            w, wall, p99 = pair[adaptive]
+            wps[adaptive] = w / wall
+            name = f"detect_drift_{scheme.lower()}" + \
+                (f"_{suffix}" if suffix else "")
+            derived = f"windows_s={wps[adaptive]:.0f};p99_ms={p99 * 1e3:.2f}"
+            if adaptive:
+                derived += (f";vs_fixed={pair['ratio']:.2f}x"
+                            f";live_thr={pair['live_thr']:.4g}")
+            rows.append({"name": name,
+                         "us_per_call": wall / max(w, 1) * 1e6,
+                         "derived": derived})
+        print(f"# drift {scheme}: adaptive {wps[True]:.0f} vs fixed "
+              f"{wps[False]:.0f} windows/s (paired ratio "
+              f"{pair['ratio']:.2f}x, live_thr={pair['live_thr']:.4g})")
 
     print(f"# device scaling ({spec.STREAMS_PER_DEVICE} plants/device)")
     rows.extend(run_scaling(quick))

@@ -2,9 +2,9 @@ from repro.serving.continuous import ContinuousEngine, ServeStats
 from repro.serving.cyclic import CyclicDecoder
 from repro.serving.engine import Completion, Engine, Request
 from repro.serving.grouped import GroupedStreamEngine, ModelGroup
-from repro.serving.streams import (LatencyReservoir, StreamEngine, StreamStats,
-                                   Verdict)
+from repro.serving.streams import (AdaptConfig, LatencyReservoir, StreamEngine,
+                                   StreamStats, Verdict)
 
-__all__ = ["ContinuousEngine", "CyclicDecoder", "Completion", "Engine",
-           "GroupedStreamEngine", "LatencyReservoir", "ModelGroup",
+__all__ = ["AdaptConfig", "ContinuousEngine", "CyclicDecoder", "Completion",
+           "Engine", "GroupedStreamEngine", "LatencyReservoir", "ModelGroup",
            "Request", "ServeStats", "StreamEngine", "StreamStats", "Verdict"]

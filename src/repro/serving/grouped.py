@@ -37,13 +37,22 @@ the group name so fleet-level consumers can attribute mixed-head verdicts.
 Groups cannot cross-contaminate by construction: thresholds, quantization
 scales and models live in per-group closures traced into disjoint stream
 slices of the step.
+
+**Per-group drift adaptation.**  ``ModelGroup.adapt`` turns on streaming
+threshold recalibration for that group alone (the
+:class:`~repro.serving.streams.AdaptConfig` policy of ``StreamEngine``):
+the group's rolling benign-score state advances inside the shared donated
+step — row-local, so it shards exactly like the group's ring arena — and
+the group's live threshold tracks the sliding ``conservative_quantile`` of
+its own admitted scores.  Adaptive and fixed-threshold groups mix freely in
+one engine; each group's verdicts report its own live threshold.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -55,9 +64,10 @@ from repro.configs import msf_detector as spec
 from repro.core.model import Model, ParamTree
 from repro.kernels import ops
 from repro.launch.mesh import make_fleet_mesh
-from repro.serving.streams import (LatencyReservoir, StreamStats, Verdict,
-                                   _dense_batched, _layer_stack)
-from repro.sim.heads import ClassifierHead, DetectorHead
+from repro.serving.streams import (AdaptConfig, LatencyReservoir, StreamStats,
+                                   Verdict, _dense_batched, _layer_stack,
+                                   _resolve_adapt)
+from repro.sim.heads import ClassifierHead, DetectorHead, ScoreHead
 
 
 @dataclasses.dataclass
@@ -75,13 +85,15 @@ class ModelGroup:
     n_streams: int
     head: Optional[DetectorHead] = None
     fused: Optional[bool] = None
+    adapt: Union[bool, "AdaptConfig", None] = None
 
 
 class _GroupState:
     """Per-group serving state: geometry, compiled-body closure, ring."""
 
     __slots__ = ("name", "head", "window", "offset", "n_streams", "s_pad",
-                 "body", "pos", "consumed", "use_fused", "windows")
+                 "body", "pos", "consumed", "use_fused", "windows",
+                 "adapt", "live_threshold", "fires")
 
     def __init__(self, name, head, window, offset, n_streams):
         self.name = name
@@ -92,6 +104,7 @@ class _GroupState:
         self.pos = 0                  # next ring write index (host-tracked)
         self.consumed = 0             # scan count at the last fired step
         self.windows = 0              # verdicts emitted for this group
+        self.fires = 0                # steps this group participated in
 
 
 class GroupedStreamEngine:
@@ -159,14 +172,21 @@ class GroupedStreamEngine:
                     f"non-'data' mesh axes must have size 1, got {extra}")
         self.mesh = mesh
         self.n_shards = 1 if mesh is None else mesh.shape["data"]
-        self._arena_sharding = (
-            None if mesh is None
-            else NamedSharding(mesh, P("data", None, None)))
+        if mesh is None:
+            self._arena_sharding = None
+            self._calib_sharding = None
+            self._counts_sharding = None
+        else:
+            self._arena_sharding = NamedSharding(mesh, P("data", None, None))
+            self._calib_sharding = NamedSharding(mesh, P("data", None))
+            self._counts_sharding = NamedSharding(mesh, P("data"))
 
         # -- per-group geometry, bodies, rings -----------------------------
         self._groups: List[_GroupState] = []
         self._bodies: List[Callable] = []
         self._rings: List[jax.Array] = []
+        self._calibs: List[jax.Array] = []
+        self._counts: List[jax.Array] = []
         offset = 0
         for g in groups:
             head = ClassifierHead() if g.head is None else g.head
@@ -190,11 +210,19 @@ class GroupedStreamEngine:
             # streams sliced off before verdicts.
             st.s_pad = -(-g.n_streams // self.n_shards) * self.n_shards
             st.use_fused = use_fused
-            st.body = self._make_body(stack, head, use_fused, window)
+            st.adapt = _resolve_adapt(g.adapt, head,
+                                      what=f"group {g.name!r}: ")
+            st.live_threshold = (head.threshold
+                                 if isinstance(head, ScoreHead) else None)
+            st.body = self._make_body(stack, head, use_fused, window,
+                                      st.adapt)
             self._groups.append(st)
             self._bodies.append(st.body)
             self._rings.append(self._place(
                 jnp.zeros((st.s_pad, window, n_features), jnp.float32)))
+            calib, counts = self._calib_state(st)
+            self._calibs.append(calib)
+            self._counts.append(counts)
             offset += g.n_streams
         self.max_window = max(st.window for st in self._groups)
 
@@ -212,14 +240,36 @@ class GroupedStreamEngine:
 
     # -- construction helpers ----------------------------------------------
 
-    def _place(self, arr) -> jax.Array:
-        if self._arena_sharding is None:
+    def _place(self, arr, sharding=None) -> jax.Array:
+        if self.mesh is None:
             return jnp.asarray(arr)
-        return jax.device_put(arr, self._arena_sharding)
+        return jax.device_put(
+            arr, self._arena_sharding if sharding is None else sharding)
 
-    def _make_body(self, stack, head, use_fused, window):
+    def _calib_state(self, st: _GroupState) -> Tuple[jax.Array, jax.Array]:
+        """A group's (placed) rolling calibration state.  Non-adaptive
+        groups carry a minimal dummy so every step has one uniform
+        ``(ring, calib, counts, block, pos, thr)`` signature per group —
+        the dummy rides through the donated step untouched."""
+        if st.adapt is not None:
+            calib, counts = st.head.calib_state(st.s_pad, st.adapt.capacity)
+        else:
+            calib = jnp.zeros((st.s_pad, 1), jnp.float32)
+            counts = jnp.zeros((st.s_pad,), jnp.int32)
+        return (self._place(calib, self._calib_sharding),
+                self._place(counts, self._counts_sharding))
+
+    @staticmethod
+    def _thr(st: _GroupState) -> jnp.float32:
+        """The group's live threshold as the step's scalar operand (0.0 for
+        heads with no threshold — the body never reads it then)."""
+        return jnp.float32(0.0 if st.live_threshold is None
+                           else st.live_threshold)
+
+    def _make_body(self, stack, head, use_fused, window, adapt_cfg):
         """One group's device step body — identical math to StreamEngine's
-        step (ring scatter, oldest-first unroll, forward, head hooks), so
+        step (ring scatter, oldest-first unroll, forward, head hooks, and,
+        when the group adapts, the rolling calibration-state write), so
         grouped serving bit-matches an independent per-model engine."""
         backend = self._backend
         w = window
@@ -231,7 +281,7 @@ class GroupedStreamEngine:
                 x = _dense_batched(x, p, act, backend)
             return x
 
-        def body(ring, block, pos):
+        def body(ring, calib, counts, block, pos, thr):
             length = block.shape[1]
             offset = max(length - w, 0)
             idx = (pos + offset + jnp.arange(length - offset)) % w
@@ -239,7 +289,11 @@ class GroupedStreamEngine:
             end = (pos + length) % w
             widx = (end + jnp.arange(w)) % w
             win = jnp.take(ring, widx, axis=1).reshape(ring.shape[0], -1)
-            return ring, head.epilogue(win, _forward(head.prepare(win)))
+            out = head.epilogue(win, _forward(head.prepare(win)))
+            if adapt_cfg is not None:
+                calib, counts = head.calib_update(
+                    calib, counts, out, thr, adapt_cfg.headroom)
+            return ring, calib, counts, out
 
         return body
 
@@ -250,26 +304,33 @@ class GroupedStreamEngine:
             return step
         bodies = [self._bodies[gi] for gi, _ in key]
 
-        def _step(rings, blocks, poss):
-            outs = [body(ring, block, pos) for body, ring, block, pos
-                    in zip(bodies, rings, blocks, poss)]
-            return tuple(o[0] for o in outs), tuple(o[1] for o in outs)
+        def _step(rings, calibs, countss, blocks, poss, thrs):
+            outs = [body(ring, calib, counts, block, pos, thr)
+                    for body, ring, calib, counts, block, pos, thr
+                    in zip(bodies, rings, calibs, countss, blocks, poss,
+                           thrs)]
+            return (tuple(o[0] for o in outs), tuple(o[1] for o in outs),
+                    tuple(o[2] for o in outs), tuple(o[3] for o in outs))
 
         if self.mesh is not None:
             # One shard_map over the whole multi-group body: every group
-            # body is stream-local, so each device serves its contiguous
-            # shard of every ready group with zero collectives — G fused
-            # dispatches per device per step.  check_rep=False: pallas_call
-            # carries no replication rule.
+            # body is stream-local (the calibration-state write included),
+            # so each device serves its contiguous shard of every ready
+            # group with zero collectives — G fused dispatches per device
+            # per step.  check_rep=False: pallas_call carries no
+            # replication rule.
             n = len(key)
             _step = shard_map(
                 _step, mesh=self.mesh,
                 in_specs=((P("data", None, None),) * n,
-                          (P("data", None, None),) * n, (P(),) * n),
+                          (P("data", None),) * n, (P("data"),) * n,
+                          (P("data", None, None),) * n,
+                          (P(),) * n, (P(),) * n),
                 out_specs=((P("data", None, None),) * n,
+                           (P("data", None),) * n, (P("data"),) * n,
                            (P("data", None),) * n),
                 check_rep=False)
-        step = self._steps[key] = jax.jit(_step, donate_argnums=0)
+        step = self._steps[key] = jax.jit(_step, donate_argnums=(0, 1, 2))
         return step
 
     # -- readiness schedule ------------------------------------------------
@@ -303,11 +364,15 @@ class GroupedStreamEngine:
             rings = tuple(self._place(jnp.zeros(
                 (self._groups[gi].s_pad, self._groups[gi].window,
                  self.n_features), jnp.float32)) for gi, _ in key)
+            states = [self._calib_state(self._groups[gi]) for gi, _ in key]
             blocks = tuple(self._place(jnp.zeros(
                 (self._groups[gi].s_pad, length, self.n_features),
                 jnp.float32)) for gi, length in key)
             poss = tuple(jnp.int32(0) for _ in key)
-            _, outs = self._get_step(key)(rings, blocks, poss)
+            thrs = tuple(self._thr(self._groups[gi]) for gi, _ in key)
+            *_, outs = self._get_step(key)(
+                rings, tuple(c for c, _ in states),
+                tuple(n for _, n in states), blocks, poss, thrs)
             jax.block_until_ready(outs)
 
     # -- ingestion ---------------------------------------------------------
@@ -339,7 +404,8 @@ class GroupedStreamEngine:
             self.stats.wall_s += time.perf_counter() - t0
             return []
 
-        key, rings, blocks, poss = [], [], [], []
+        key, rings, calibs, countss, blocks, poss, thrs = \
+            [], [], [], [], [], [], []
         for gi, st in ready:
             span = self._count - st.consumed
             length = min(span, st.window)
@@ -353,16 +419,24 @@ class GroupedStreamEngine:
             eff_pos = (st.pos + (span - length)) % st.window
             key.append((gi, length))
             rings.append(self._rings[gi])
+            calibs.append(self._calibs[gi])
+            countss.append(self._counts[gi])
             blocks.append(self._place(block))
             poss.append(jnp.int32(eff_pos))
+            thrs.append(self._thr(st))
             st.pos = (st.pos + span) % st.window
             st.consumed = self._count
+            st.fires += 1
 
-        new_rings, outs = self._get_step(tuple(key))(
-            tuple(rings), tuple(blocks), tuple(poss))
+        new_rings, new_calibs, new_counts, outs = self._get_step(tuple(key))(
+            tuple(rings), tuple(calibs), tuple(countss), tuple(blocks),
+            tuple(poss), tuple(thrs))
         outs = jax.block_until_ready(outs)
-        for (gi, _), ring in zip(key, new_rings):
+        for (gi, _), ring, calib, counts in zip(key, new_rings, new_calibs,
+                                                new_counts):
             self._rings[gi] = ring
+            self._calibs[gi] = calib
+            self._counts[gi] = counts
 
         latency = time.perf_counter() - t0
         miss = latency > self.deadline_s
@@ -373,7 +447,17 @@ class GroupedStreamEngine:
             # Pad-stream rows are dropped here and never surface.
             out = np.asarray(out)[:st.n_streams]
             self.last_outputs[st.name] = out
-            pred, prob, score, thr = st.head.host_verdicts(out)
+            # Per-group streaming recalibration (StreamEngine contract: pad
+            # rows sliced off before the pooled quantile).
+            if st.adapt is not None and st.fires % st.adapt.every == 0:
+                thr = st.head.streaming_threshold(
+                    np.asarray(self._calibs[gi])[:st.n_streams],
+                    np.asarray(self._counts[gi])[:st.n_streams],
+                    min_count=st.adapt.min_count)
+                if thr is not None:
+                    st.live_threshold = thr
+            pred, prob, score, thr = st.head.host_verdicts(
+                out, threshold=st.live_threshold)
             for i in range(st.n_streams):
                 verdicts.append(Verdict(
                     stream=st.offset + i, cycle=cycle, pred=int(pred[i]),
@@ -426,3 +510,8 @@ class GroupedStreamEngine:
     def group_windows(self) -> Dict[str, int]:
         """Verdicts emitted per group."""
         return {st.name: st.windows for st in self._groups}
+
+    def live_thresholds(self) -> Dict[str, Optional[float]]:
+        """Each group's live threshold (None for threshold-free heads;
+        equals the offline-calibrated cutoff until adaptation moves it)."""
+        return {st.name: st.live_threshold for st in self._groups}

@@ -19,6 +19,21 @@ the host receives one float per stream and compares it against the
 FPR-calibrated threshold.  Heads are row-local, so they compose with fleet
 sharding without new collectives.
 
+**Online drift adaptation.**  A threshold calibrated once, offline, floods
+with false alarms when the plant drifts (sensor recalibration, seasonal
+load, wear creep the benign score distribution).  With ``adapt=`` the
+engine maintains the head's rolling benign-score calibration state *inside*
+the donated jitted step (``ScoreHead.calib_update`` — a per-stream score
+ring, row-local, so it shards with the arena with zero new collectives) and
+periodically re-hosts the offline score-then-quantile calibration sequence
+on it (``ScoreHead.streaming_threshold`` — ``conservative_quantile`` of the
+trailing admitted scores at the head's recorded ``target_fpr``).  The
+engine's ``live_threshold`` starts at the offline-calibrated cutoff and
+tracks the streaming quantile; every ``Verdict.threshold`` reports the live
+value.  Scores beyond ``AdaptConfig.headroom`` times the live threshold are
+treated as attacks and never enter the calibration state, so an attacked
+stream cannot drag the fleet threshold up after itself.
+
 Quantized serving (§6.1) runs the same step with SINT/INT/DINT params from
 ``repro.core.quantize``: SINT (int8) layers go through the Pallas
 ``qmatmul`` int8 MXU path via ``repro.kernels.ops.quantized_matmul``
@@ -55,8 +70,9 @@ classic unsharded step.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +85,7 @@ from repro.core.layers import ACTIVATIONS
 from repro.core.model import Model, ParamTree
 from repro.kernels import ops
 from repro.launch.mesh import make_fleet_mesh
-from repro.sim.heads import ClassifierHead, DetectorHead
+from repro.sim.heads import ClassifierHead, DetectorHead, ScoreHead
 
 
 @dataclasses.dataclass
@@ -94,6 +110,13 @@ class Verdict:
     group: Optional[str] = None         # model-group name (grouped fleets)
 
 
+# Default reservoir seeds come from a process-global counter, so every
+# engine's reservoir draws a distinct replacement sequence: with a shared
+# fixed seed, split engines (the grouped-vs-split bench) replaced the SAME
+# retained indices in lockstep, correlating their percentile estimates.
+_reservoir_seeds = itertools.count()
+
+
 class LatencyReservoir:
     """Bounded uniform sample of verdict latencies (Vitter's Algorithm R).
 
@@ -107,19 +130,27 @@ class LatencyReservoir:
     memory stays O(capacity).
 
     List-like where it matters: ``len`` / truthiness / iteration / indexing
-    and slicing cover every pre-reservoir consumer (the detection bench
-    slices per-pass latency tails, which stay exact below ``capacity``).
+    and slicing cover every pre-reservoir consumer.  Slicing is only
+    meaningful while the retained items are the exact append-ordered list,
+    so once ``seen`` exceeds ``capacity`` (Algorithm R has replaced random
+    retained indices) slice access **raises** instead of silently returning
+    a uniform jumble — per-pass latency tails should come from
+    :meth:`StreamStats.reset_latencies` instead.
+
+    ``seed=None`` (the default) draws an engine-unique seed from a process
+    counter; pass an explicit seed for reproducible replacement sequences.
     """
 
-    __slots__ = ("capacity", "seen", "_items", "_rng")
+    __slots__ = ("capacity", "seen", "seed", "_items", "_rng")
 
-    def __init__(self, capacity: int = 4096, seed: int = 0):
+    def __init__(self, capacity: int = 4096, seed: Optional[int] = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self.seen = 0                 # total appends ever observed
+        self.seed = next(_reservoir_seeds) if seed is None else seed
         self._items: List[float] = []
-        self._rng = np.random.default_rng(seed)
+        self._rng = np.random.default_rng(self.seed)
 
     def append(self, value: float) -> None:
         self.seen += 1
@@ -140,6 +171,13 @@ class LatencyReservoir:
         return iter(self._items)
 
     def __getitem__(self, idx):
+        if isinstance(idx, slice) and self.seen > self.capacity:
+            raise ValueError(
+                f"latency tail slices are only exact below the reservoir "
+                f"capacity ({self.capacity}); after {self.seen} appends "
+                "Algorithm R has replaced random retained indices, so a "
+                "slice is a uniform jumble, not a pass tail — take "
+                "per-pass tails via StreamStats.reset_latencies()")
         return self._items[idx]
 
     def percentile(self, q: float) -> float:
@@ -166,8 +204,80 @@ class StreamStats:
     def latency_p(self, q: float) -> float:
         return self.latencies_s.percentile(q)
 
+    def reset_latencies(self) -> LatencyReservoir:
+        """Swap in a fresh (same-capacity, fresh-seed) reservoir and return
+        the retired one — the sanctioned way to take per-pass latency tails
+        (benchmark passes): tail *slices* of a reservoir past its capacity
+        are silently wrong, because Algorithm R replaces random retained
+        indices, and therefore raise."""
+        old = self.latencies_s
+        self.latencies_s = LatencyReservoir(capacity=old.capacity)
+        return old
+
     def windows_per_s(self) -> float:
         return self.windows / self.wall_s if self.wall_s > 0 else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    """Streaming threshold-recalibration policy (online drift adaptation).
+
+    ``capacity`` is the per-stream rolling score-ring length (the sketch
+    window: the live threshold is the conservative quantile of the trailing
+    ``<= capacity`` admitted scores per stream, pooled fleet-wide).
+    ``every`` recalibrates once per that many fired verdict steps; the
+    device-side state update runs every step regardless.  ``min_count``
+    holds the threshold at its offline-calibrated seed until that many
+    scores have been admitted fleet-wide (early tiny pools make noisy
+    quantiles).  ``headroom`` is the admission gate: scores at most
+    ``headroom`` times the live threshold enter the calibration state —
+    wide enough that gradual benign drift passes through the gate even when
+    it crosses the threshold, tight enough that attack scores (orders of
+    magnitude out) never poison the state.
+    """
+
+    capacity: int = 32
+    every: int = 1
+    min_count: int = 16
+    headroom: float = 4.0
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if self.every < 1:
+            raise ValueError(f"every must be >= 1, got {self.every}")
+        if self.min_count < 1:
+            raise ValueError(f"min_count must be >= 1, got {self.min_count}")
+        if self.headroom < 1.0:
+            raise ValueError(
+                f"headroom must be >= 1 (the gate must at least admit "
+                f"sub-threshold scores), got {self.headroom}")
+
+
+def _resolve_adapt(adapt: Union[bool, AdaptConfig, None],
+                   head: DetectorHead, what: str = "") -> Optional[AdaptConfig]:
+    """Validate and normalize an ``adapt=`` knob: None/False off, True the
+    default policy, an :class:`AdaptConfig` verbatim.  Adaptation requires a
+    calibrated :class:`ScoreHead` with a recorded ``target_fpr`` (the
+    streaming quantile chases the same operating point the offline
+    calibration chose)."""
+    if adapt is None or adapt is False:
+        return None
+    cfg = AdaptConfig() if adapt is True else adapt
+    if not isinstance(cfg, AdaptConfig):
+        raise ValueError(f"{what}adapt must be None/bool/AdaptConfig, "
+                         f"got {cfg!r}")
+    if not isinstance(head, ScoreHead):
+        raise ValueError(
+            f"{what}adapt=True needs a score-vs-threshold head (ScoreHead); "
+            f"the {head.name!r} head has no score distribution to "
+            "recalibrate on")
+    if head.threshold is None or head.target_fpr is None:
+        raise ValueError(
+            f"{what}adapt=True needs a calibrated head with a recorded "
+            "target_fpr to seed and steer the live threshold "
+            "(head.calibrate / the sim.detector trainers set both)")
+    return cfg
 
 
 def _layer_stack(model: Model, params: ParamTree) -> List[Tuple[Dict, str]]:
@@ -242,6 +352,14 @@ class StreamEngine:
     device mesh (any mesh whose ``"data"`` axis carries the streams and whose
     other axes, if present, have size 1); it defaults to
     ``make_fleet_mesh()`` over every visible device.
+
+    ``adapt`` turns on streaming threshold recalibration (module docstring):
+    ``True`` uses the default :class:`AdaptConfig`, an explicit config tunes
+    the rolling-state geometry and cadence.  Requires a calibrated
+    :class:`~repro.sim.heads.ScoreHead` with a recorded ``target_fpr``; the
+    engine's ``live_threshold`` then tracks the sliding benign-score
+    quantile and every verdict reports it.  Constructor-only knob like
+    ``fused``/``head``.
     """
 
     def __init__(self, model: Model, params: ParamTree, *,
@@ -256,7 +374,8 @@ class StreamEngine:
                  fused: Optional[bool] = None,
                  head: Optional[DetectorHead] = None,
                  shard: Optional[bool] = None,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 adapt: Union[bool, AdaptConfig, None] = None):
         (input_size,) = model.input_shape
         # Verdict-head routing: the head's device epilogue is traced into the
         # jitted step below (sharded and unsharded) and its host epilogue
@@ -330,8 +449,20 @@ class StreamEngine:
         self.shard_streams = self._s_pad // self.n_shards
         if mesh is not None:
             self._arena_sharding = NamedSharding(mesh, P("data", None, None))
+            self._calib_sharding = NamedSharding(mesh, P("data", None))
+            self._counts_sharding = NamedSharding(mesh, P("data"))
         else:
             self._arena_sharding = None
+            self._calib_sharding = None
+            self._counts_sharding = None
+
+        # Streaming recalibration (constructor-only, like fused/head): the
+        # live threshold starts at the offline-calibrated cutoff; score
+        # heads without adaptation keep it pinned there forever.
+        self.adapt = adapt_cfg = _resolve_adapt(adapt, self._verdict_head)
+        self.live_threshold = (
+            self._verdict_head.threshold
+            if isinstance(self._verdict_head, ScoreHead) else None)
 
         w = window
         verdict_head = self._verdict_head
@@ -344,12 +475,13 @@ class StreamEngine:
                 x = _dense_batched(x, p, act, backend)
             return x
 
-        def _step(ring, block, pos):
+        def _body(ring, block, pos):
             # block: (S, L, F) pending readings; L static per compile (the
-            # warmup block is `window` long, steady-state blocks `stride`).
-            # When L > window (stride > window: verdicts sampled less often
-            # than the ring fills) only the last `window` readings can land —
-            # trim before scattering so the indices are provably unique
+            # warmup block is `window` long, steady-state blocks
+            # `min(stride, window)` — ingest() trims longer spans host-side).
+            # The device trim below is defense in depth for direct callers:
+            # only the last `window` readings can ever land, and trimming
+            # before scattering keeps the indices provably unique
             # (duplicate-index scatter-set order is undefined off-CPU).
             length = block.shape[1]
             offset = max(length - w, 0)
@@ -370,45 +502,84 @@ class StreamEngine:
             return ring, verdict_head.epilogue(
                 win, _forward(verdict_head.prepare(win)))
 
+        if adapt_cfg is None:
+            _step = _body
+        else:
+            headroom = adapt_cfg.headroom
+
+            def _step(ring, calib, counts, block, pos, thr):
+                # The rolling benign-score state advances INSIDE the donated
+                # step: one row-local ring write per stream, gated on the
+                # live threshold — no extra dispatch, no new collectives.
+                ring, out = _body(ring, block, pos)
+                calib, counts = verdict_head.calib_update(
+                    calib, counts, out, thr, headroom)
+                return ring, calib, counts, out
+
         if mesh is not None:
             # Each device runs the *whole* step body on its shard — ring
-            # scatter, window unroll and the (fused Pallas) forward are all
-            # stream-local, so the mesh introduces zero collectives.
-            # check_rep=False: pallas_call carries no replication rule.
+            # scatter, window unroll, the (fused Pallas) forward and the
+            # calibration-state write are all stream-local, so the mesh
+            # introduces zero collectives.  check_rep=False: pallas_call
+            # carries no replication rule.
+            if adapt_cfg is None:
+                in_specs = (P("data"), P("data"), P())
+                out_specs = (P("data"), P("data"))
+            else:
+                in_specs = (P("data"), P("data"), P("data"),
+                            P("data"), P(), P())
+                out_specs = (P("data"), P("data"), P("data"), P("data"))
             _step = shard_map(_step, mesh=mesh,
-                              in_specs=(P("data"), P("data"), P()),
-                              out_specs=(P("data"), P("data")),
+                              in_specs=in_specs, out_specs=out_specs,
                               check_rep=False)
-        self._step = jax.jit(_step, donate_argnums=0)
+        self._step = jax.jit(
+            _step, donate_argnums=0 if adapt_cfg is None else (0, 1, 2))
 
         self._ring = self._place(
             jnp.zeros((self._s_pad, window, n_features), jnp.float32))
+        if adapt_cfg is not None:
+            calib0, counts0 = self._verdict_head.calib_state(
+                self._s_pad, adapt_cfg.capacity)
+            self._calib_ring = self._place(calib0, self._calib_sharding)
+            self._calib_counts = self._place(counts0, self._counts_sharding)
         self._pos = 0                 # next ring write index (host-tracked)
         self._count = 0               # scan cycles ingested
+        self._consumed = 0            # scan count at the last fired step
         self._pending: List[np.ndarray] = []
         self.last_logits: Optional[np.ndarray] = None
         self.stats = StreamStats(steps=0, cycles=0, windows=0,
                                  deadline_misses=0, wall_s=0.0)
 
-    def _place(self, arr) -> jax.Array:
-        """Commit an arena-shaped array to the fleet mesh (no-op unsharded)."""
-        if self._arena_sharding is None:
+    def _place(self, arr, sharding=None) -> jax.Array:
+        """Commit an array to the fleet mesh (no-op unsharded); ``sharding``
+        defaults to the 3-D arena sharding."""
+        if self.mesh is None:
             return jnp.asarray(arr)
-        return jax.device_put(arr, self._arena_sharding)
+        return jax.device_put(
+            arr, self._arena_sharding if sharding is None else sharding)
 
     def warmup(self) -> None:
         """Compile both detector-step shapes (the warmup block is one full
-        window long, steady-state blocks are ``stride`` long) outside the
-        serve clock, so deadline accounting measures serving, not XLA.
-        Warmup arenas carry the serve-time sharding, so the compiled
-        executables are exactly the sharded ones the steps will reuse."""
-        for length in sorted({self.window, self.stride}):
+        window long, steady-state blocks are ``min(stride, window)`` long —
+        ingest() trims longer strides host-side) outside the serve clock, so
+        deadline accounting measures serving, not XLA.  Warmup arenas carry
+        the serve-time sharding, so the compiled executables are exactly the
+        sharded ones the steps will reuse."""
+        for length in sorted({self.window, min(self.stride, self.window)}):
             ring = self._place(
                 jnp.zeros((self._s_pad, self.window, self.n_features),
                           jnp.float32))
             block = self._place(
                 jnp.zeros((self._s_pad, length, self.n_features), jnp.float32))
-            _, logits = self._step(ring, block, jnp.int32(0))
+            if self.adapt is None:
+                _, logits = self._step(ring, block, jnp.int32(0))
+            else:
+                calib0, counts0 = self._verdict_head.calib_state(
+                    self._s_pad, self.adapt.capacity)
+                *_, logits = self._step(
+                    ring, self._place(calib0, self._calib_sharding),
+                    self._place(counts0, self._counts_sharding),
+                    block, jnp.int32(0), jnp.float32(self.live_threshold))
             jax.block_until_ready(logits)
 
     # -- ingestion ---------------------------------------------------------
@@ -432,27 +603,62 @@ class StreamEngine:
         self._pending.append((readings - self._mean) / self._std)
         self._count += 1
         self.stats.cycles += 1
+        # stride > window: readings older than the last `window` can never
+        # land in the ring, so drop them HERE — host memory, host->device
+        # transfer and the compiled block shapes all stay capped at `window`
+        # (mirrors GroupedStreamEngine's _pending pruning).
+        if len(self._pending) > self.window:
+            del self._pending[:len(self._pending) - self.window]
 
         verdicts: List[Verdict] = []
         if self._ready():
-            block = np.stack(self._pending, axis=1)        # (S, L, F)
+            # span = cycles elapsed since the last fired step; the pruned
+            # pending list holds exactly the last min(span, window) readings.
+            span = self._count - self._consumed
+            block = np.stack(self._pending, axis=1)        # (S, L<=W, F)
             self._pending.clear()
+            # The trimmed block starts (span - L) cycles after the untrimmed
+            # one would have: advance the write position past the dropped
+            # readings so ring geometry matches the untrimmed schedule.
+            eff_pos = (self._pos + (span - block.shape[1])) % self.window
             if self._s_pad != self.n_streams:
                 block = np.pad(
                     block, ((0, self._s_pad - self.n_streams), (0, 0), (0, 0)))
-            self._ring, logits = self._step(
-                self._ring, self._place(block), jnp.int32(self._pos))
-            self._pos = (self._pos + block.shape[1]) % self.window
+            if self.adapt is None:
+                self._ring, logits = self._step(
+                    self._ring, self._place(block), jnp.int32(eff_pos))
+            else:
+                self._ring, self._calib_ring, self._calib_counts, logits = \
+                    self._step(self._ring, self._calib_ring,
+                               self._calib_counts, self._place(block),
+                               jnp.int32(eff_pos),
+                               jnp.float32(self.live_threshold))
+            self._pos = (self._pos + span) % self.window
+            self._consumed = self._count
+            self.stats.steps += 1
             # Gathers each device's shard of logits to the host; pad-stream
             # rows are dropped here and never surface as verdicts.
             logits = np.asarray(jax.block_until_ready(logits))
             logits = logits[:self.n_streams]
             self.last_logits = logits
+            # Streaming recalibration: re-host the offline score-then-
+            # quantile sequence on the rolling state (pad rows sliced off —
+            # zero streams still score, so they must stay out of the pool).
+            if self.adapt is not None \
+                    and self.stats.steps % self.adapt.every == 0:
+                thr = self._verdict_head.streaming_threshold(
+                    np.asarray(self._calib_ring)[:self.n_streams],
+                    np.asarray(self._calib_counts)[:self.n_streams],
+                    min_count=self.adapt.min_count)
+                if thr is not None:
+                    self.live_threshold = thr
             latency = time.perf_counter() - t0
             miss = latency > self.deadline_s
             # Host epilogue via the head: classifier -> argmax/softmax,
-            # reconstruction -> score-vs-threshold.
-            pred, prob, score, thr = self._verdict_head.host_verdicts(logits)
+            # score heads -> score vs the engine's LIVE threshold (the
+            # offline cutoff unless adaptation has moved it).
+            pred, prob, score, thr = self._verdict_head.host_verdicts(
+                logits, threshold=self.live_threshold)
             cycle = self._count - 1
             for i in range(self.n_streams):
                 verdicts.append(Verdict(
@@ -461,7 +667,6 @@ class StreamEngine:
                     latency_s=latency, deadline_miss=miss,
                     score=None if score is None else float(score[i]),
                     threshold=thr))
-            self.stats.steps += 1
             self.stats.windows += self.n_streams
             self.stats.deadline_misses += int(miss) * self.n_streams
             self.stats.latencies_s.append(latency)

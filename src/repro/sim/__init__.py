@@ -8,9 +8,10 @@ from repro.sim.detector import (AETrainResult, ScoreTrainResult, TrainResult,
 from repro.sim.heads import (ClassifierHead, DetectorHead, ForecastHead,
                              MarginHead, ReconstructionHead, ScoreHead,
                              conservative_quantile, softmax_np)
-from repro.sim.msf import (ATTACK_NAMES, AttackEvent, CascadePID, CycleReading,
-                           MSFPlant, PlantParams, PlantStream, SimTrace, adc,
-                           build_dataset, make_attack, make_attacks, simulate)
+from repro.sim.msf import (ATTACK_NAMES, DRIFTABLE, AttackEvent, CascadePID,
+                           CycleReading, MSFPlant, ParamDrift, PlantParams,
+                           PlantStream, SimTrace, adc, build_dataset,
+                           make_attack, make_attacks, simulate)
 from repro.sim.scenarios import (SCENARIOS, Scenario, build_fleet,
                                  fleet_readings, get_scenario, jitter_params,
                                  list_scenarios, register_scenario, registered,
@@ -23,8 +24,9 @@ __all__ = ["AETrainResult", "ScoreTrainResult", "TrainResult",
            "train_forecaster", "train_one_class", "ClassifierHead",
            "DetectorHead", "ForecastHead", "MarginHead", "ReconstructionHead",
            "ScoreHead", "conservative_quantile", "softmax_np", "ATTACK_NAMES",
-           "AttackEvent", "CascadePID", "CycleReading", "MSFPlant",
-           "PlantParams", "PlantStream", "SimTrace", "adc", "build_dataset",
+           "DRIFTABLE", "AttackEvent", "CascadePID", "CycleReading",
+           "MSFPlant", "ParamDrift", "PlantParams", "PlantStream", "SimTrace",
+           "adc", "build_dataset",
            "make_attack", "make_attacks", "simulate", "SCENARIOS", "Scenario",
            "build_fleet", "fleet_readings", "get_scenario", "jitter_params",
            "list_scenarios", "register_scenario", "registered",

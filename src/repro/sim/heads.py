@@ -51,6 +51,32 @@ realized false-positive rate **on the calibration set itself** never exceeds
 ``target_fpr``.  (The default linear interpolation can place the cutoff
 *between* order statistics on small calibration sets, letting the empirical
 FPR overshoot the target it was calibrated to.)
+
+**Streaming recalibration** (online drift adaptation): real plants drift —
+sensor recalibration, seasonal load, wear — and a threshold calibrated once,
+offline, turns a calibrated FPR into an alarm flood as the benign score
+distribution creeps.  Every :class:`ScoreHead` therefore also owns the
+*streaming* half of its calibration contract:
+
+* :meth:`calib_state` — a per-stream rolling ring of recently admitted
+  benign-looking scores plus per-stream admission counts, shaped for the
+  serving engines' device arenas (row-local, so it shards with the
+  ``("data",)`` fleet mesh with zero new collectives);
+* :meth:`calib_update` — the **device-side** state transition, traced into
+  the engines' donated jitted step: scores at most ``headroom`` times the
+  live threshold are written into their stream's ring (scores beyond it are
+  treated as attacks and never poison the calibration state; the headroom
+  is what lets *gradual* benign drift through the gate even when it crosses
+  the threshold itself);
+* :meth:`streaming_threshold` — the **host-side** re-host of
+  ``recalibrate_threshold``'s score-then-quantile sequence onto that state:
+  :func:`conservative_quantile` of the pooled valid ring scores at the
+  head's recorded ``target_fpr``.
+
+The engines keep a *live* threshold (seeded by the offline-calibrated one)
+that tracks the streaming quantile; ``Verdict.threshold`` reports the live
+value.  :meth:`calibrate` records ``target_fpr`` on the head so streaming
+recalibration chases the same operating point the offline calibration chose.
 """
 
 from __future__ import annotations
@@ -128,11 +154,15 @@ class DetectorHead:
         verdict payload; traced into the engine's jitted detector step."""
         raise NotImplementedError
 
-    def host_verdicts(self, out: np.ndarray) -> Tuple[
+    def host_verdicts(self, out: np.ndarray,
+                      threshold: Optional[float] = None) -> Tuple[
             np.ndarray, Optional[np.ndarray], Optional[np.ndarray],
             Optional[float]]:
         """Step output -> (pred, prob|None, score|None, threshold|None),
-        each an array over streams (threshold is one float for the fleet)."""
+        each an array over streams (threshold is one float for the fleet).
+        ``threshold`` overrides the head's own calibrated cutoff — the
+        engines pass their *live* (streaming-recalibrated) threshold here,
+        so verdicts track drift while the head stays frozen."""
         raise NotImplementedError
 
 
@@ -153,7 +183,7 @@ class ClassifierHead(DetectorHead):
     def epilogue(self, win, out):
         return out                      # the logits ARE the verdict payload
 
-    def host_verdicts(self, out):
+    def host_verdicts(self, out, threshold=None):
         pred = out.argmax(axis=-1)
         prob = softmax_np(out)[np.arange(len(out)), pred]
         return pred.astype(np.int64), prob, None, None
@@ -170,10 +200,14 @@ class ScoreHead(DetectorHead):
     FPR calibration.
 
     ``threshold`` is None until calibrated (:meth:`calibrate` /
-    the ``sim.detector`` trainers); serving requires it.
+    the ``sim.detector`` trainers); serving requires it.  ``target_fpr`` is
+    recorded by :meth:`calibrate` so streaming recalibration
+    (:meth:`streaming_threshold`) chases the same false-positive operating
+    point the offline calibration chose.
     """
 
     threshold: Optional[float] = None
+    target_fpr: Optional[float] = None
     name: str = "score"
 
     def batch_scores(self, outputs: jax.Array, x: jax.Array) -> jax.Array:
@@ -212,17 +246,77 @@ class ScoreHead(DetectorHead):
         if scores.size == 0:
             raise ValueError("cannot calibrate on zero normal scores")
         return dataclasses.replace(
-            self, threshold=conservative_quantile(scores, target_fpr))
+            self, threshold=conservative_quantile(scores, target_fpr),
+            target_fpr=target_fpr)
 
-    def host_verdicts(self, out):
-        if self.threshold is None:
+    def host_verdicts(self, out, threshold=None):
+        thr = self.threshold if threshold is None else threshold
+        if thr is None:
             raise ValueError(
                 f"{type(self).__name__} has no threshold; calibrate it on "
                 "held-out normal traces first (head.calibrate / the "
                 "sim.detector trainers)")
         score = out[:, 0] if out.ndim == 2 else out
-        pred = (score > self.threshold).astype(np.int64)
-        return pred, None, score, self.threshold
+        pred = (score > thr).astype(np.int64)
+        return pred, None, score, thr
+
+    # -- streaming recalibration (online drift adaptation) -----------------
+
+    def calib_state(self, n_streams: int,
+                    capacity: int) -> Tuple[jax.Array, jax.Array]:
+        """Zeroed per-stream rolling calibration state: a ``(n_streams,
+        capacity)`` ring of admitted scores plus ``(n_streams,)`` admission
+        counts.  Row-local by construction, so the serving engines shard it
+        with the ring arena (``P("data", ...)``) with zero new collectives."""
+        return (jnp.zeros((n_streams, capacity), jnp.float32),
+                jnp.zeros((n_streams,), jnp.int32))
+
+    def calib_update(self, ring: jax.Array, counts: jax.Array,
+                     scores: jax.Array, threshold: jax.Array,
+                     headroom: float) -> Tuple[jax.Array, jax.Array]:
+        """Device-side state transition, traced into the engines' jitted
+        step: each stream's score is admitted into its rolling ring iff it
+        is at most ``headroom`` times the live ``threshold``.  Sub-headroom
+        scores are what gradual benign drift looks like (they may exceed the
+        threshold itself — that excess is exactly the drift the state must
+        learn); scores beyond the headroom are treated as attacks and never
+        enter the calibration state, so an attacked stream cannot drag the
+        fleet threshold up after itself.  Rows are independent (each stream
+        writes its own ring slot), so the update rides through ``shard_map``
+        untouched."""
+        s = scores[:, 0] if scores.ndim == 2 else scores
+        admit = s <= headroom * threshold
+        pos = counts % ring.shape[1]
+        rows = jnp.arange(ring.shape[0])
+        ring = ring.at[rows, pos].set(jnp.where(admit, s, ring[rows, pos]))
+        return ring, counts + admit.astype(counts.dtype)
+
+    def streaming_scores(self, ring, counts) -> np.ndarray:
+        """Host-side: the pooled valid scores in a gathered calibration
+        state (ring slot ``j`` of a stream holds a real score iff ``j <
+        count`` — below one full ring the state is exactly the admitted
+        score list, after wraparound it is the trailing ``capacity``)."""
+        ring = np.asarray(ring)
+        counts = np.asarray(counts)
+        valid = np.arange(ring.shape[1])[None, :] < counts[:, None]
+        return ring[valid]
+
+    def streaming_threshold(self, ring, counts, *,
+                            min_count: int = 1) -> Optional[float]:
+        """Host-side re-host of ``recalibrate_threshold``'s score-then-
+        quantile sequence onto the streaming state: the conservative
+        ``(1 - target_fpr)`` quantile of the pooled valid ring scores.
+        Returns None (leave the live threshold alone) until ``min_count``
+        scores have been admitted fleet-wide."""
+        if self.target_fpr is None:
+            raise ValueError(
+                f"{type(self).__name__} has no target_fpr; calibrate via "
+                "head.calibrate / the sim.detector trainers (or construct "
+                "with target_fpr=) before streaming recalibration")
+        scores = self.streaming_scores(ring, counts)
+        if scores.size < max(min_count, 1):
+            return None
+        return conservative_quantile(scores, self.target_fpr)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -61,6 +61,68 @@ def jitter_params(base: PlantParams, rel: float,
     )
 
 
+# Physical constants a benign drift may creep — jitter_params' set plus the
+# environment-driven ones; never the Wd setpoint (operator-fixed).
+DRIFTABLE = frozenset({"t_sea", "tau_tb", "k_steam", "k_flash",
+                       "t_flash_min", "recycle", "noise_tb0", "noise_wd"})
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDrift:
+    """Benign time-varying plant drift — ``jitter_params`` made time-varying.
+
+    NOT an attack: labels stay 0.  This is the threshold-killer the ICS
+    surveys describe — sensor recalibration, seasonal seawater temperature,
+    fouling/wear — creeping the benign operating point away from where the
+    detector's threshold was calibrated.
+
+    ``shifts`` maps physical-constant names (:data:`DRIFTABLE`) to the total
+    relative change reached at the end of the ramp: field ``f`` at cycle
+    ``c`` is ``base.f * (1 + shift * frac(c))``, where ``frac`` ramps
+    linearly from 0 at ``start`` to 1 at ``start + ramp`` and holds there.
+    A dict passed as ``shifts`` is normalized to a sorted tuple of pairs so
+    the dataclass stays hashable/frozen.
+    """
+
+    shifts: Tuple[Tuple[str, float], ...]
+    start: int = 0
+    ramp: int = 1000
+
+    def __post_init__(self):
+        s = self.shifts
+        items = sorted(s.items()) if isinstance(s, dict) else list(s)
+        shifts = tuple((str(k), float(v)) for k, v in items)
+        if not shifts:
+            raise ValueError("ParamDrift needs at least one shifted field")
+        for k, v in shifts:
+            if k not in DRIFTABLE:
+                raise ValueError(
+                    f"cannot drift {k!r}; driftable fields: "
+                    f"{sorted(DRIFTABLE)}")
+            if v <= -1.0:
+                raise ValueError(
+                    f"shift for {k!r} must be > -1 (a physical constant "
+                    f"cannot drift through zero), got {v}")
+        if self.ramp < 1:
+            raise ValueError(f"ramp must be >= 1 cycle, got {self.ramp}")
+        object.__setattr__(self, "shifts", shifts)
+
+    def fraction(self, cycle: int) -> float:
+        """Ramp progress in [0, 1] at ``cycle``."""
+        if cycle <= self.start:
+            return 0.0
+        return min((cycle - self.start) / self.ramp, 1.0)
+
+    def apply(self, base: PlantParams, cycle: int) -> PlantParams:
+        """The drifted parameter set at ``cycle`` (``base`` if pre-onset)."""
+        f = self.fraction(cycle)
+        if f == 0.0:
+            return base
+        return dataclasses.replace(
+            base, **{k: getattr(base, k) * (1.0 + v * f)
+                     for k, v in self.shifts})
+
+
 @dataclasses.dataclass
 class PIDGains:
     kp: float
@@ -214,9 +276,14 @@ class MSFPlant:
         wd += self.rng.normal(0.0, p.noise_wd)
         return self.tb0, wd
 
-    def apply_overrides(self, overrides: Dict[str, float]) -> None:
-        self.p = dataclasses.replace(self.base, **overrides) if overrides else \
-            dataclasses.replace(self.base)
+    def apply_overrides(self, overrides: Dict[str, float],
+                        base: Optional[PlantParams] = None) -> None:
+        """Rebuild the effective params from ``base`` (default: the
+        construction-time params — a drifting stream passes the drifted set)
+        plus the attack's overrides."""
+        base = self.base if base is None else base
+        self.p = dataclasses.replace(base, **overrides) if overrides else \
+            dataclasses.replace(base)
 
 
 @dataclasses.dataclass
@@ -248,18 +315,22 @@ class PlantStream:
 
     ``events`` is a sequence of :class:`AttackEvent`; when several are active
     at once the earliest-listed one wins (no superposition — one adversary at
-    the controls at a time).
+    the controls at a time).  ``drift`` is an optional :class:`ParamDrift`
+    creeping the plant's physical constants over time — benign (labels stay
+    0) and composable with attacks: the attack's parameter overrides apply
+    on top of the drifted base.
     """
 
     def __init__(self, params: Optional[PlantParams] = None, *,
                  events: Sequence[AttackEvent] = (), seed: int = 0,
-                 name: str = ""):
+                 name: str = "", drift: Optional[ParamDrift] = None):
         self.params = params or PlantParams()
         self.plant = MSFPlant(self.params, seed=seed)
         self.pid = CascadePID()
         self.events = tuple(events)
         self._fns = [make_attack(e.attack_id, e.intensity) for e in self.events]
         self.name = name
+        self.drift = drift
         self.cycle = 0
         # settle readings at the operating point before the loop
         self.tb0_true = self.params.tb0_init
@@ -286,12 +357,15 @@ class PlantStream:
         # -- control (the PLC's primary task)
         ws = self.pid.step(wd_meas, tb0_meas, self.params.wd_setpoint)
 
-        # -- actuate (attack may tamper with actuators / plant params)
+        # -- actuate (attack may tamper with actuators / plant params;
+        #    benign drift creeps the base the overrides apply on top of)
         overrides: Dict[str, float] = {}
         ws_eff = ws
         if event is not None:
             ws_eff, overrides, _ = fn(cycle - event.start, ws)
-        self.plant.apply_overrides(overrides)
+        base = self.params if self.drift is None \
+            else self.drift.apply(self.params, cycle)
+        self.plant.apply_overrides(overrides, base=base)
         self.tb0_true, self.wd_true = self.plant.step(ws_eff)
 
         self.cycle += 1
@@ -311,19 +385,20 @@ def simulate(
     defense_hook: Optional[Callable[[int, np.ndarray], None]] = None,
     events: Optional[Sequence[AttackEvent]] = None,
     params: Optional[PlantParams] = None,
+    drift: Optional[ParamDrift] = None,
 ) -> SimTrace:
     """Run the closed loop for n_cycles; optionally inject attacks.
 
     ``attack_id``/``attack_start`` keep the original single-attack interface;
     ``events`` takes a full :class:`AttackEvent` schedule (mutually exclusive
-    with the former).
+    with the former).  ``drift`` applies benign parameter drift.
     """
     if events is None:
         events = ([AttackEvent(attack_id, attack_start)]
                   if attack_id != 0 and attack_start is not None else [])
     elif attack_id != 0 or attack_start is not None:
         raise ValueError("pass either attack_id/attack_start or events, not both")
-    stream = PlantStream(params, events=events, seed=seed)
+    stream = PlantStream(params, events=events, seed=seed, drift=drift)
 
     out = {k: np.zeros(n_cycles) for k in
            ("tb0_meas", "wd_meas", "tb0_true", "wd_true", "ws_cmd", "label")}

@@ -23,18 +23,24 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.sim.msf import (ATTACK_NAMES, AttackEvent, PlantParams,
+from repro.sim.msf import (ATTACK_NAMES, AttackEvent, ParamDrift, PlantParams,
                            PlantStream, jitter_params)
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """A named, reproducible attack schedule for one plant."""
+    """A named, reproducible attack schedule for one plant.
+
+    ``drift`` optionally creeps the plant's physical constants over the run
+    (:class:`~repro.sim.msf.ParamDrift`) — benign, so a drift-only scenario
+    has no onset and its verdict stream counts toward false-positive rate,
+    not detection."""
 
     name: str
     description: str
     events: Tuple[AttackEvent, ...] = ()
     jitter: float = 0.01          # relative physical-parameter jitter
+    drift: Optional[ParamDrift] = None
 
     @property
     def families(self) -> Tuple[int, ...]:
@@ -51,9 +57,9 @@ class Scenario:
 
 
 def _s(name: str, description: str, *events: AttackEvent,
-       jitter: float = 0.01) -> Scenario:
+       jitter: float = 0.01, drift: Optional[ParamDrift] = None) -> Scenario:
     return Scenario(name=name, description=description, events=tuple(events),
-                    jitter=jitter)
+                    jitter=jitter, drift=drift)
 
 
 # One scenario per family at §7 magnitudes, plus intensity/duration variants
@@ -92,6 +98,18 @@ _ALL = [
        AttackEvent(1, start=300, duration=200),
        AttackEvent(3, start=700, duration=200),
        AttackEvent(5, start=1100, duration=200)),
+    # Drifting plants (time-varying physical constants, NOT attacks): the
+    # flash-gain decay moves the PID-held TB0 operating point by ~2 sigma of
+    # the detector normalization — the benign-score creep that floods a
+    # fixed threshold and that streaming recalibration must absorb.
+    _s("seasonal-drift",
+       "benign flash-gain decay + warming seawater; no attack",
+       drift=ParamDrift({"k_flash": -0.08, "t_sea": 0.04},
+                        start=300, ramp=1200)),
+    _s("drift-then-throttle",
+       "steam throttle landing on an already-drifted plant",
+       AttackEvent(1, start=1300),
+       drift=ParamDrift({"k_flash": -0.08}, start=300, ramp=800)),
 ]
 
 SCENARIOS: Dict[str, Scenario] = {s.name: s for s in _ALL}
@@ -165,13 +183,16 @@ def build_fleet(
     seed: int = 0,
     jitter: Optional[float] = None,
     base_params: Optional[PlantParams] = None,
+    drift: Optional[ParamDrift] = None,
 ) -> List[PlantStream]:
     """A fleet of plant streams, scenarios assigned round-robin.
 
     ``names`` defaults to the full library; ``n_plants`` defaults to one plant
-    per name.  ``jitter`` overrides every scenario's own jitter.  Each plant
-    gets a distinct seed (process noise and jitter draws decorrelate), and its
-    ``name`` records ``{scenario}#{index}`` for verdict attribution.
+    per name.  ``jitter`` overrides every scenario's own jitter; ``drift``
+    overrides every scenario's own drift (fleet-wide seasonal/wear drift on
+    top of any attack schedule).  Each plant gets a distinct seed (process
+    noise and jitter draws decorrelate), and its ``name`` records
+    ``{scenario}#{index}`` for verdict attribution.
     """
     names = list(names) if names is not None else list(SCENARIOS)
     if not names:
@@ -184,7 +205,8 @@ def build_fleet(
         rel = sc.jitter if jitter is None else jitter
         params = jitter_params(base, rel, np.random.default_rng(seed + 7919 * i))
         fleet.append(PlantStream(params, events=sc.events, seed=seed + i,
-                                 name=f"{sc.name}#{i}"))
+                                 name=f"{sc.name}#{i}",
+                                 drift=sc.drift if drift is None else drift))
     return fleet
 
 
@@ -195,12 +217,14 @@ def fleet_readings(
     names: Optional[Sequence[str]] = None,
     seed: int = 0,
     jitter: Optional[float] = None,
+    drift: Optional[ParamDrift] = None,
 ) -> np.ndarray:
     """A ``(n_cycles, n_streams, 2)`` raw ``(tb0_meas, wd_meas)`` matrix from
     a scenario fleet — the pre-generated reading block the detection bench
     and the sharded-parity tests drive engines with (simulation cost stays
     out of the serve clock)."""
-    fleet = build_fleet(names, n_streams, seed=seed, jitter=jitter)
+    fleet = build_fleet(names, n_streams, seed=seed, jitter=jitter,
+                        drift=drift)
     out = np.zeros((n_cycles, n_streams, 2), np.float32)
     for c in range(n_cycles):
         for i, s in enumerate(fleet):
@@ -228,5 +252,9 @@ def scenario_table() -> str:
             + (f"+{e.duration}" if e.duration is not None else "")
             + (f" x{e.intensity:g}" if e.intensity != 1.0 else "")
             for e in s.events) or "(benign)"
+        if s.drift is not None:
+            drifted = ",".join(f"{k}{v:+.0%}" for k, v in s.drift.shifts)
+            evs += (f" [drift {drifted}@{s.drift.start}"
+                    f"+{s.drift.ramp}]")
         rows.append(f"{s.name:<24} {fams:<9} {onsets:<13} {durs:<13} {evs}")
     return "\n".join(rows)

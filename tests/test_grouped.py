@@ -205,10 +205,14 @@ class TestSingleDispatchPerGroup:
         key = tuple((gi, ge.stride) for gi in range(len(groups)))
         step = ge._get_step(key)
         rings = tuple(jnp.zeros_like(r) for r in ge._rings)
+        calibs = tuple(jnp.zeros_like(c) for c in ge._calibs)
+        countss = tuple(jnp.zeros_like(c) for c in ge._counts)
         blocks = tuple(jnp.zeros((ge._groups[gi].s_pad, length, 2),
                                  jnp.float32) for gi, length in key)
         poss = tuple(jnp.int32(0) for _ in key)
-        jaxpr = jax.make_jaxpr(step)(rings, blocks, poss)
+        thrs = tuple(ge._thr(ge._groups[gi]) for gi, _ in key)
+        jaxpr = jax.make_jaxpr(step)(rings, calibs, countss, blocks, poss,
+                                     thrs)
         return count_pallas_calls(jaxpr.jaxpr), len(groups)
 
     def test_unsharded_step_is_one_dispatch_per_group(self):
@@ -231,10 +235,13 @@ class TestSingleDispatchPerGroup:
         key = ((1, 4), (3, 4))                       # two of four ready
         step = ge._get_step(key)
         rings = tuple(jnp.zeros_like(ge._rings[gi]) for gi, _ in key)
+        calibs = tuple(jnp.zeros_like(ge._calibs[gi]) for gi, _ in key)
+        countss = tuple(jnp.zeros_like(ge._counts[gi]) for gi, _ in key)
         blocks = tuple(jnp.zeros((ge._groups[gi].s_pad, length, 2),
                                  jnp.float32) for gi, length in key)
-        jaxpr = jax.make_jaxpr(step)(rings, blocks,
-                                     (jnp.int32(0), jnp.int32(0)))
+        thrs = tuple(ge._thr(ge._groups[gi]) for gi, _ in key)
+        jaxpr = jax.make_jaxpr(step)(rings, calibs, countss, blocks,
+                                     (jnp.int32(0), jnp.int32(0)), thrs)
         assert count_pallas_calls(jaxpr.jaxpr) == 2
 
     def test_warmup_precompiles_every_schedule_key(self):
