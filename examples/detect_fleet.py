@@ -29,6 +29,13 @@ N-device ``("data",)`` mesh — on a CPU host the devices are fanned out via
 ``XLA_FLAGS=--xla_force_host_platform_device_count`` (set here before jax
 loads), on real hardware the mesh maps onto the visible accelerators.
 
+``--async`` serves double-buffered (``async_depth=1``): each ready
+boundary dispatches the detector step and returns to ingesting the next
+scan cycle while the device works, harvesting the previous step's
+verdicts — bit-identical to synchronous serving, one boundary later
+(``flush()`` drains the last in-flight step).  After the serve it prints
+a sync-vs-async sustained windows/s comparison on fresh engines.
+
 ``--drift`` overlays fleet-wide benign parameter drift (flash-gain decay +
 warming seawater, the ``seasonal-drift`` physics) on every plant's scenario
 and switches score-head detectors to **online threshold recalibration**
@@ -49,6 +56,7 @@ Run:
   PYTHONPATH=src python examples/detect_fleet.py --plants 16 --quant SINT
   PYTHONPATH=src python examples/detect_fleet.py --plants 64 --devices 4
   PYTHONPATH=src python examples/detect_fleet.py --mixed --fast --plants 16
+  PYTHONPATH=src python examples/detect_fleet.py --async --fast --plants 16
   PYTHONPATH=src python examples/detect_fleet.py --detector ae --drift \
       --scenarios baseline,seasonal-drift,tb0-spoof,wd-spoof --plants 16
 """
@@ -58,6 +66,7 @@ import collections
 import os
 import sys
 import tempfile
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -77,6 +86,8 @@ def _fan_out_devices() -> int:
 
 
 _fan_out_devices()
+
+import numpy as np
 
 from repro.configs import msf_detector as spec
 from repro.core import porting, quantize
@@ -181,6 +192,36 @@ def train_mixed(fast: bool, quant: str):
     return out
 
 
+def sustained_side_by_side(make_engine, n_streams, n_cycles=800):
+    """Sync-vs-async sustained windows/s under continuous per-cycle arrival.
+
+    Fresh engines (built by ``make_engine(async_depth)``), synthetic normal
+    readings (serving throughput is content-independent), ring fill
+    untimed, ``flush()`` inside the timed region so every dispatched window
+    is also harvested."""
+    readings = (np.asarray(spec.NORM_MEAN, np.float32)
+                + np.random.default_rng(0)
+                .normal(size=(n_cycles, n_streams, spec.N_FEATURES))
+                .astype(np.float32) * np.asarray(spec.NORM_STD, np.float32))
+    wps = {}
+    for depth in (0, 1):
+        eng = make_engine(depth)
+        eng.warmup()
+        for c in range(min(spec.WINDOW, n_cycles)):
+            eng.ingest(readings[c])
+        eng.flush()
+        w0 = eng.stats.windows
+        t0 = time.perf_counter()
+        for c in range(n_cycles):
+            eng.ingest(readings[c])
+        eng.flush()
+        wps[depth] = (eng.stats.windows - w0) / (time.perf_counter() - t0)
+    print(f"\nsustained throughput ({n_cycles} cycles, continuous arrival):")
+    print(f"  sync   {wps[0]:>8.0f} windows/s")
+    print(f"  async  {wps[1]:>8.0f} windows/s ({wps[1] / wps[0]:.2f}x, "
+          f"double-buffered: ingest of cycle N+1 overlaps step N)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenarios", default="all",
@@ -207,6 +248,10 @@ def main():
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the fleet over this many devices "
                          "(host devices are fanned out automatically)")
+    ap.add_argument("--async", dest="async_serve", action="store_true",
+                    help="serve double-buffered (async_depth=1: verdicts "
+                         "arrive one ready boundary late, bit-identical) "
+                         "and print sync-vs-async sustained windows/s")
     ap.add_argument("--list", action="store_true",
                     help="print the scenario library and exit")
     args = ap.parse_args()
@@ -234,6 +279,7 @@ def main():
     # --devices 1 pins sharding OFF even in a multi-device process, so the
     # flag always means what the serve header prints.
     shard_kw = {"mesh": mesh} if mesh is not None else {"shard": False}
+    async_note = ", async double-buffered" if args.async_serve else ""
     if args.mixed:
         detectors = train_mixed(args.fast, args.quant)
         if args.plants < len(detectors):
@@ -243,10 +289,15 @@ def main():
                              base + (1 if i < extra else 0), head,
                              adapt=args.drift and head is not None)
                   for i, (name, model, params, head) in enumerate(detectors)]
-        engine = GroupedStreamEngine(groups, **shard_kw)
+
+        def make_engine(depth):
+            return GroupedStreamEngine(groups, async_depth=depth, **shard_kw)
+
+        engine = make_engine(1 if args.async_serve else 0)
         split = " + ".join(f"{n}x{name}" for name, _, n in engine.groups)
         print(f"== serving {args.plants} plants x {args.cycles} cycles "
-              f"(mixed: {split} / {args.quant}{shard_note}{drift_note}) ==")
+              f"(mixed: {split} / {args.quant}{shard_note}{drift_note}"
+              f"{async_note}) ==")
     else:
         model, params, head = train_and_port(args.fast, args.quant,
                                              args.detector)
@@ -254,14 +305,22 @@ def main():
             print("note: --drift serves a drifting fleet, but the "
                   "classifier has no score threshold to recalibrate "
                   "(use --detector ae for adaptation)")
-        engine = StreamEngine(model, params, n_streams=args.plants, head=head,
-                              adapt=args.drift and head is not None or None,
-                              **shard_kw)
+
+        def make_engine(depth):
+            return StreamEngine(model, params, n_streams=args.plants,
+                                head=head,
+                                adapt=args.drift and head is not None or None,
+                                async_depth=depth, **shard_kw)
+
+        engine = make_engine(1 if args.async_serve else 0)
         print(f"== serving {args.plants} plants x {args.cycles} cycles "
-              f"({args.detector}/{args.quant}{shard_note}{drift_note}) ==")
+              f"({args.detector}/{args.quant}{shard_note}{drift_note}"
+              f"{async_note}) ==")
     engine.warmup()
     flagged = collections.defaultdict(list)   # stream -> attack-verdict cycles
-    for v in engine.run(fleet, args.cycles):
+    verdicts = engine.run(fleet, args.cycles)
+    verdicts += engine.flush()   # async: drain the final in-flight step
+    for v in verdicts:
         if v.pred != 0:
             flagged[v.stream].append(v.cycle)
 
@@ -309,6 +368,8 @@ def main():
           f"p50={st.latency_p(50) * 1e3:.1f}ms p99={st.latency_p(99) * 1e3:.1f}ms "
           f"| deadline({spec.DEADLINE_S * 1e3:.0f}ms) misses: "
           f"{st.deadline_misses}/{st.windows}")
+    if args.async_serve:
+        sustained_side_by_side(make_engine, args.plants)
 
 
 if __name__ == "__main__":

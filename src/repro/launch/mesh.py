@@ -35,24 +35,46 @@ def make_host_mesh() -> jax.sharding.Mesh:
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def make_fleet_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
-    """A 1-D ``("data",)`` mesh for stream-axis fleet sharding.
+def make_fleet_mesh(n_devices: int | None = None, *,
+                    model_shards: int = 1) -> jax.sharding.Mesh:
+    """The fleet-serving mesh: 1-D ``("data",)``, or 2-D ``("data",
+    "model")`` when ``model_shards > 1``.
 
-    ``StreamEngine`` partitions its per-stream ring arena over this mesh so
-    each device owns a contiguous shard of plants and runs the detector step
-    on it locally (no cross-device traffic on the hot path).  ``n_devices``
-    defaults to every visible device; a smaller count takes a prefix, so
-    1/2/4-way meshes can coexist in one multi-device process (the
-    sharded-parity tests rely on this).
+    ``StreamEngine`` partitions its per-stream ring arena over the ``data``
+    axis so each device owns a contiguous shard of plants and runs the
+    detector step on it locally (no cross-device traffic on the hot path).
+    With ``model_shards=m`` the serving core additionally column-shards
+    wide Dense layers over the ``model`` axis — each of the ``m`` ranks per
+    data shard computes its own slice of the layer's output columns and one
+    tiled ``all_gather`` recombines them (``serving/core.py``).
+
+    ``n_devices`` is the **data-axis** width; it defaults to every visible
+    device (divided by ``model_shards`` for a 2-D mesh).  The mesh takes a
+    prefix of the device list, so 1/2/4-way meshes can coexist in one
+    multi-device process (the sharded-parity tests rely on this).
     """
     devices = jax.devices()
-    n = len(devices) if n_devices is None else n_devices
-    if not 1 <= n <= len(devices):
+    if model_shards < 1:
+        raise RuntimeError(f"model_shards must be >= 1, got {model_shards}")
+    if model_shards == 1:
+        n = len(devices) if n_devices is None else n_devices
+        if not 1 <= n <= len(devices):
+            raise RuntimeError(
+                f"fleet mesh needs 1..{len(devices)} devices, asked for {n}; "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count=<n> to "
+                "fan out host devices")
+        return jax.make_mesh((n,), ("data",), devices=devices[:n])
+    n_data = (len(devices) // model_shards if n_devices is None
+              else n_devices)
+    need = n_data * model_shards
+    if n_data < 1 or need > len(devices):
         raise RuntimeError(
-            f"fleet mesh needs 1..{len(devices)} devices, asked for {n}; "
-            "set XLA_FLAGS=--xla_force_host_platform_device_count=<n> to "
-            "fan out host devices")
-    return jax.make_mesh((n,), ("data",), devices=devices[:n])
+            f"fleet mesh ({n_data}, {model_shards}) needs {need} devices "
+            f"but only {len(devices)} present; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=<n> to fan "
+            "out host devices")
+    return jax.make_mesh((n_data, model_shards), ("data", "model"),
+                         devices=devices[:need])
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

@@ -1,4 +1,5 @@
 from repro.serving.continuous import ContinuousEngine, ServeStats
+from repro.serving.core import ServingCore, ServingUnit
 from repro.serving.cyclic import CyclicDecoder
 from repro.serving.engine import Completion, Engine, Request
 from repro.serving.grouped import GroupedStreamEngine, ModelGroup
@@ -7,4 +8,5 @@ from repro.serving.streams import (AdaptConfig, LatencyReservoir, StreamEngine,
 
 __all__ = ["AdaptConfig", "ContinuousEngine", "CyclicDecoder", "Completion",
            "Engine", "GroupedStreamEngine", "LatencyReservoir", "ModelGroup",
-           "Request", "ServeStats", "StreamEngine", "StreamStats", "Verdict"]
+           "Request", "ServeStats", "ServingCore", "ServingUnit",
+           "StreamEngine", "StreamStats", "Verdict"]

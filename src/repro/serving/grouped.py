@@ -5,7 +5,9 @@ all share ONE model and ONE verdict head.  Real OT estates are heterogeneous
 — different plant types, per-site models, classifier vs autoencoder vs
 margin vs forecast heads, per-device quantization — so the production
 question is not "batch N clones of one detector" but "batch N *groups* of
-different detectors".  :class:`GroupedStreamEngine` does that:
+different detectors".  :class:`GroupedStreamEngine` does that, as the
+many-model façade over the shared :class:`~repro.serving.core.ServingCore`
+pipeline (one group = one :class:`~repro.serving.core.ServingUnit`):
 
 * The fleet's stream axis is partitioned into contiguous **model groups**
   (:class:`ModelGroup`): each group carries its own model, its own
@@ -25,12 +27,16 @@ different detectors".  :class:`GroupedStreamEngine` does that:
   windows differ become ready at different cycles during fill-in; each
   distinct ready-combination compiles once and steady state (every group
   ready every ``stride``) reuses a single compiled step.
-* **Sharding** composes per group: under a ``("data",)`` fleet mesh each
-  group's arena is padded to the mesh (its own pad-stream contract) and the
-  whole multi-group step body runs under one ``shard_map`` — every device
-  serves its contiguous shard of every group, still with zero hot-path
-  collectives, because group bodies are stream-local exactly like the
-  single-model step.
+* **Sharding** composes per group: under the ``"data"`` axis of a fleet
+  mesh each group's arena is padded to the mesh (its own pad-stream
+  contract) and the whole multi-group step body runs under one
+  ``shard_map`` — every device serves its contiguous shard of every group.
+  A ``("data", "model")`` mesh additionally column-shards each group's
+  wide layers over the model axis (see ``serving/core.py``); on a 1-D mesh
+  the hot path stays collective-free exactly like the single-model step.
+* ``async_depth=1`` double-buffers the whole multi-group step (the
+  ``serving/core.py`` contract): verdicts bit-match sync mode one ready
+  boundary later; drain with ``flush()``.
 
 Verdict semantics per group come from its head; ``Verdict.group`` carries
 the group name so fleet-level consumers can attribute mixed-head verdicts.
@@ -51,23 +57,16 @@ one engine; each group's verdicts report its own live threshold.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs import msf_detector as spec
 from repro.core.model import Model, ParamTree
-from repro.kernels import ops
-from repro.launch.mesh import make_fleet_mesh
-from repro.serving.streams import (AdaptConfig, LatencyReservoir, StreamStats,
-                                   Verdict, _dense_batched, _layer_stack,
-                                   _resolve_adapt)
-from repro.sim.heads import ClassifierHead, DetectorHead, ScoreHead
+from repro.serving.core import (  # noqa: F401  (historical import surface)
+    AdaptConfig, LatencyReservoir, ServingCore, ServingUnit, StreamStats,
+    Verdict)
+from repro.sim.heads import DetectorHead
 
 
 @dataclasses.dataclass
@@ -88,26 +87,7 @@ class ModelGroup:
     adapt: Union[bool, "AdaptConfig", None] = None
 
 
-class _GroupState:
-    """Per-group serving state: geometry, compiled-body closure, ring."""
-
-    __slots__ = ("name", "head", "window", "offset", "n_streams", "s_pad",
-                 "body", "pos", "consumed", "use_fused", "windows",
-                 "adapt", "live_threshold", "fires")
-
-    def __init__(self, name, head, window, offset, n_streams):
-        self.name = name
-        self.head = head
-        self.window = window
-        self.offset = offset          # first global stream index
-        self.n_streams = n_streams
-        self.pos = 0                  # next ring write index (host-tracked)
-        self.consumed = 0             # scan count at the last fired step
-        self.windows = 0              # verdicts emitted for this group
-        self.fires = 0                # steps this group participated in
-
-
-class GroupedStreamEngine:
+class GroupedStreamEngine(ServingCore):
     """Batched sliding-window serving over a heterogeneous detector fleet.
 
     ``groups`` partitions the global stream axis contiguously: group ``i``
@@ -117,11 +97,11 @@ class GroupedStreamEngine:
     readings host-side, and when any group's window cadence completes it
     runs one jitted donated step over every ready group's ring arena.
 
-    ``backend`` / ``shard`` / ``mesh`` follow the ``StreamEngine`` contract
-    (``shard=None`` auto-shards on multi-device processes; the auto mesh is
-    never wider than the *smallest* group so no group degenerates to
-    pure-pad shards; an explicit wider mesh still serves correctly through
-    each group's pad-stream contract).
+    ``backend`` / ``shard`` / ``mesh`` / ``async_depth`` follow the
+    ``StreamEngine`` contract (``shard=None`` auto-shards on multi-device
+    processes; the auto mesh is never wider than the *smallest* group so no
+    group degenerates to pure-pad shards; an explicit wider mesh still
+    serves correctly through each group's pad-stream contract).
     """
 
     def __init__(self, groups: Sequence[ModelGroup], *,
@@ -132,386 +112,39 @@ class GroupedStreamEngine:
                  norm_std: Sequence[float] = spec.NORM_STD,
                  backend: str = "auto",
                  shard: Optional[bool] = None,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 async_depth: int = 0):
         if not groups:
             raise ValueError("need at least one ModelGroup")
         names = [g.name for g in groups]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate group names: {names}")
-        if any(g.n_streams < 1 for g in groups):
-            raise ValueError("every group needs n_streams >= 1")
-        if not 1 <= stride:
-            raise ValueError("stride must be >= 1")
-        self.n_features = n_features
-        self.stride = stride
-        self.deadline_s = deadline_s
-        self._mean = np.asarray(norm_mean, np.float32)
-        self._std = np.asarray(norm_std, np.float32)
-        if self._mean.shape != (n_features,) or \
-                self._std.shape != (n_features,):
-            raise ValueError("norm_mean/norm_std must have one entry per "
-                             "feature")
-        self._backend = backend
-        self.n_streams = sum(g.n_streams for g in groups)
-
-        # -- mesh (StreamEngine contract, min-group width cap) -------------
-        if shard is False and mesh is not None:
-            raise ValueError("shard=False contradicts an explicit mesh")
-        if mesh is None and (shard or (shard is None
-                                       and len(jax.devices()) > 1)):
-            mesh = make_fleet_mesh(min(len(jax.devices()),
-                                       *(g.n_streams for g in groups)))
-        if mesh is not None:
-            if "data" not in mesh.axis_names:
-                raise ValueError(f"fleet mesh needs a 'data' axis, got "
-                                 f"{mesh.axis_names}")
-            extra = [a for a in mesh.axis_names
-                     if a != "data" and mesh.shape[a] != 1]
-            if extra:
-                raise ValueError(
-                    f"non-'data' mesh axes must have size 1, got {extra}")
-        self.mesh = mesh
-        self.n_shards = 1 if mesh is None else mesh.shape["data"]
-        if mesh is None:
-            self._arena_sharding = None
-            self._calib_sharding = None
-            self._counts_sharding = None
-        else:
-            self._arena_sharding = NamedSharding(mesh, P("data", None, None))
-            self._calib_sharding = NamedSharding(mesh, P("data", None))
-            self._counts_sharding = NamedSharding(mesh, P("data"))
-
-        # -- per-group geometry, bodies, rings -----------------------------
-        self._groups: List[_GroupState] = []
-        self._bodies: List[Callable] = []
-        self._rings: List[jax.Array] = []
-        self._calibs: List[jax.Array] = []
-        self._counts: List[jax.Array] = []
-        offset = 0
-        for g in groups:
-            head = ClassifierHead() if g.head is None else g.head
-            (input_size,) = g.model.input_shape
-            window = head.ring_window(input_size, n_features)
-            stack = _layer_stack(g.model, g.params)
-            last = stack[-1][0]
-            n_out = (last["qw"] if "qw" in last else last["w"]).shape[1]
-            head.validate(input_size, n_out)
-            fusable = ops.model_fusable(g.model, stack)
-            if g.fused and not fusable:
-                reason = ops.fuse_reason(stack) or \
-                    "the model graph has non-Dense nodes"
-                raise ValueError(
-                    f"group {g.name!r}: fused=True but the model cannot "
-                    f"fuse: {reason}")
-            use_fused = fusable if g.fused is None else g.fused
-            st = _GroupState(g.name, head, window, offset, g.n_streams)
-            # Pad-stream contract per group: every device owns an equal
-            # contiguous shard of each group's arena; pad rows are zero
-            # streams sliced off before verdicts.
-            st.s_pad = -(-g.n_streams // self.n_shards) * self.n_shards
-            st.use_fused = use_fused
-            st.adapt = _resolve_adapt(g.adapt, head,
-                                      what=f"group {g.name!r}: ")
-            st.live_threshold = (head.threshold
-                                 if isinstance(head, ScoreHead) else None)
-            st.body = self._make_body(stack, head, use_fused, window,
-                                      st.adapt)
-            self._groups.append(st)
-            self._bodies.append(st.body)
-            self._rings.append(self._place(
-                jnp.zeros((st.s_pad, window, n_features), jnp.float32)))
-            calib, counts = self._calib_state(st)
-            self._calibs.append(calib)
-            self._counts.append(counts)
-            offset += g.n_streams
-        self.max_window = max(st.window for st in self._groups)
-
-        # Compiled steps keyed by the ready-combination signature
-        # ((group_idx, block_len), ...): steady state — every group ready
-        # with a stride-long block — is one key reused forever; window
-        # fill-in transitions each compile once.
-        self._steps: Dict[Tuple, Callable] = {}
-
-        self._count = 0
-        self._pending: List[np.ndarray] = []
-        self.last_outputs: Dict[str, np.ndarray] = {}
-        self.stats = StreamStats(steps=0, cycles=0, windows=0,
-                                 deadline_misses=0, wall_s=0.0)
-
-    # -- construction helpers ----------------------------------------------
-
-    def _place(self, arr, sharding=None) -> jax.Array:
-        if self.mesh is None:
-            return jnp.asarray(arr)
-        return jax.device_put(
-            arr, self._arena_sharding if sharding is None else sharding)
-
-    def _calib_state(self, st: _GroupState) -> Tuple[jax.Array, jax.Array]:
-        """A group's (placed) rolling calibration state.  Non-adaptive
-        groups carry a minimal dummy so every step has one uniform
-        ``(ring, calib, counts, block, pos, thr)`` signature per group —
-        the dummy rides through the donated step untouched."""
-        if st.adapt is not None:
-            calib, counts = st.head.calib_state(st.s_pad, st.adapt.capacity)
-        else:
-            calib = jnp.zeros((st.s_pad, 1), jnp.float32)
-            counts = jnp.zeros((st.s_pad,), jnp.int32)
-        return (self._place(calib, self._calib_sharding),
-                self._place(counts, self._counts_sharding))
-
-    @staticmethod
-    def _thr(st: _GroupState) -> jnp.float32:
-        """The group's live threshold as the step's scalar operand (0.0 for
-        heads with no threshold — the body never reads it then)."""
-        return jnp.float32(0.0 if st.live_threshold is None
-                           else st.live_threshold)
-
-    def _make_body(self, stack, head, use_fused, window, adapt_cfg):
-        """One group's device step body — identical math to StreamEngine's
-        step (ring scatter, oldest-first unroll, forward, head hooks, and,
-        when the group adapts, the rolling calibration-state write), so
-        grouped serving bit-matches an independent per-model engine."""
-        backend = self._backend
-        w = window
-
-        def _forward(x):
-            if use_fused:
-                return ops.fused_forward(x, stack, backend=backend)
-            for p, act in stack:
-                x = _dense_batched(x, p, act, backend)
-            return x
-
-        def body(ring, calib, counts, block, pos, thr):
-            length = block.shape[1]
-            offset = max(length - w, 0)
-            idx = (pos + offset + jnp.arange(length - offset)) % w
-            ring = ring.at[:, idx, :].set(block[:, offset:])
-            end = (pos + length) % w
-            widx = (end + jnp.arange(w)) % w
-            win = jnp.take(ring, widx, axis=1).reshape(ring.shape[0], -1)
-            out = head.epilogue(win, _forward(head.prepare(win)))
-            if adapt_cfg is not None:
-                calib, counts = head.calib_update(
-                    calib, counts, out, thr, adapt_cfg.headroom)
-            return ring, calib, counts, out
-
-        return body
-
-    def _get_step(self, key: Tuple) -> Callable:
-        """The jitted donated step for one ready-combination."""
-        step = self._steps.get(key)
-        if step is not None:
-            return step
-        bodies = [self._bodies[gi] for gi, _ in key]
-
-        def _step(rings, calibs, countss, blocks, poss, thrs):
-            outs = [body(ring, calib, counts, block, pos, thr)
-                    for body, ring, calib, counts, block, pos, thr
-                    in zip(bodies, rings, calibs, countss, blocks, poss,
-                           thrs)]
-            return (tuple(o[0] for o in outs), tuple(o[1] for o in outs),
-                    tuple(o[2] for o in outs), tuple(o[3] for o in outs))
-
-        if self.mesh is not None:
-            # One shard_map over the whole multi-group body: every group
-            # body is stream-local (the calibration-state write included),
-            # so each device serves its contiguous shard of every ready
-            # group with zero collectives — G fused dispatches per device
-            # per step.  check_rep=False: pallas_call carries no
-            # replication rule.
-            n = len(key)
-            _step = shard_map(
-                _step, mesh=self.mesh,
-                in_specs=((P("data", None, None),) * n,
-                          (P("data", None),) * n, (P("data"),) * n,
-                          (P("data", None, None),) * n,
-                          (P(),) * n, (P(),) * n),
-                out_specs=((P("data", None, None),) * n,
-                           (P("data", None),) * n, (P("data"),) * n,
-                           (P("data", None),) * n),
-                check_rep=False)
-        step = self._steps[key] = jax.jit(_step, donate_argnums=(0, 1, 2))
-        return step
-
-    # -- readiness schedule ------------------------------------------------
-
-    def _ready(self, st: _GroupState, count: int) -> bool:
-        return (count >= st.window
-                and (count - st.window) % self.stride == 0)
-
-    def _schedule_keys(self) -> List[Tuple]:
-        """Every distinct ready-combination key the serve loop will hit, by
-        simulating the (deterministic) readiness schedule through window
-        fill-in plus one full steady-state stride period."""
-        keys: List[Tuple] = []
-        consumed = {i: 0 for i in range(len(self._groups))}
-        for count in range(1, self.max_window + self.stride + 1):
-            key = []
-            for gi, st in enumerate(self._groups):
-                if self._ready(st, count):
-                    span = count - consumed[gi]
-                    key.append((gi, min(span, st.window)))
-                    consumed[gi] = count
-            if key and tuple(key) not in keys:
-                keys.append(tuple(key))
-        return keys
-
-    def warmup(self) -> None:
-        """Compile every step shape the readiness schedule can produce —
-        each group's window-fill firing and the steady-state all-ready step
-        — outside the serve clock, with the serve-time arena sharding."""
-        for key in self._schedule_keys():
-            rings = tuple(self._place(jnp.zeros(
-                (self._groups[gi].s_pad, self._groups[gi].window,
-                 self.n_features), jnp.float32)) for gi, _ in key)
-            states = [self._calib_state(self._groups[gi]) for gi, _ in key]
-            blocks = tuple(self._place(jnp.zeros(
-                (self._groups[gi].s_pad, length, self.n_features),
-                jnp.float32)) for gi, length in key)
-            poss = tuple(jnp.int32(0) for _ in key)
-            thrs = tuple(self._thr(self._groups[gi]) for gi, _ in key)
-            *_, outs = self._get_step(key)(
-                rings, tuple(c for c, _ in states),
-                tuple(n for _, n in states), blocks, poss, thrs)
-            jax.block_until_ready(outs)
-
-    # -- ingestion ---------------------------------------------------------
-
-    def ingest(self, readings: np.ndarray) -> List[Verdict]:
-        """One scan cycle of fleet readings -> verdicts (usually empty).
-
-        ``readings`` is ``(n_streams, n_features)`` raw sensor values over
-        the whole fleet, group slices concatenated in group order.
-        """
-        t0 = time.perf_counter()
-        readings = np.asarray(readings, np.float32)
-        if readings.shape != (self.n_streams, self.n_features):
-            raise ValueError(
-                f"expected ({self.n_streams}, {self.n_features}) readings, "
-                f"got {readings.shape}")
-        self._pending.append((readings - self._mean) / self._std)
-        # The pending tail only ever feeds blocks of at most max_window
-        # readings (longer spans are trimmed to the window) — prune so a
-        # stalled cadence can't grow host memory.
-        if len(self._pending) > self.max_window:
-            del self._pending[:len(self._pending) - self.max_window]
-        self._count += 1
-        self.stats.cycles += 1
-
-        ready = [(gi, st) for gi, st in enumerate(self._groups)
-                 if self._ready(st, self._count)]
-        if not ready:
-            self.stats.wall_s += time.perf_counter() - t0
-            return []
-
-        key, rings, calibs, countss, blocks, poss, thrs = \
-            [], [], [], [], [], [], []
-        for gi, st in ready:
-            span = self._count - st.consumed
-            length = min(span, st.window)
-            block = np.stack(self._pending[-length:], axis=1)  # (S, L, F)
-            block = block[st.offset:st.offset + st.n_streams]
-            if st.s_pad != st.n_streams:
-                block = np.pad(
-                    block, ((0, st.s_pad - st.n_streams), (0, 0), (0, 0)))
-            # The ring write always ends at (pos + span - 1) mod window;
-            # host-side trimming of long spans shifts the start to match.
-            eff_pos = (st.pos + (span - length)) % st.window
-            key.append((gi, length))
-            rings.append(self._rings[gi])
-            calibs.append(self._calibs[gi])
-            countss.append(self._counts[gi])
-            blocks.append(self._place(block))
-            poss.append(jnp.int32(eff_pos))
-            thrs.append(self._thr(st))
-            st.pos = (st.pos + span) % st.window
-            st.consumed = self._count
-            st.fires += 1
-
-        new_rings, new_calibs, new_counts, outs = self._get_step(tuple(key))(
-            tuple(rings), tuple(calibs), tuple(countss), tuple(blocks),
-            tuple(poss), tuple(thrs))
-        outs = jax.block_until_ready(outs)
-        for (gi, _), ring, calib, counts in zip(key, new_rings, new_calibs,
-                                                new_counts):
-            self._rings[gi] = ring
-            self._calibs[gi] = calib
-            self._counts[gi] = counts
-
-        latency = time.perf_counter() - t0
-        miss = latency > self.deadline_s
-        cycle = self._count - 1
-        verdicts: List[Verdict] = []
-        for (gi, _), out in zip(key, outs):
-            st = self._groups[gi]
-            # Pad-stream rows are dropped here and never surface.
-            out = np.asarray(out)[:st.n_streams]
-            self.last_outputs[st.name] = out
-            # Per-group streaming recalibration (StreamEngine contract: pad
-            # rows sliced off before the pooled quantile).
-            if st.adapt is not None and st.fires % st.adapt.every == 0:
-                thr = st.head.streaming_threshold(
-                    np.asarray(self._calibs[gi])[:st.n_streams],
-                    np.asarray(self._counts[gi])[:st.n_streams],
-                    min_count=st.adapt.min_count)
-                if thr is not None:
-                    st.live_threshold = thr
-            pred, prob, score, thr = st.head.host_verdicts(
-                out, threshold=st.live_threshold)
-            for i in range(st.n_streams):
-                verdicts.append(Verdict(
-                    stream=st.offset + i, cycle=cycle, pred=int(pred[i]),
-                    prob=None if prob is None else float(prob[i]),
-                    latency_s=latency, deadline_miss=miss,
-                    score=None if score is None else float(score[i]),
-                    threshold=thr, group=st.name))
-            st.windows += st.n_streams
-            self.stats.windows += st.n_streams
-            self.stats.deadline_misses += int(miss) * st.n_streams
-        self.stats.steps += 1
-        self.stats.latencies_s.append(latency)
-        self.stats.wall_s += time.perf_counter() - t0
-        return verdicts
-
-    def run(self, streams: Sequence[Any], n_cycles: int,
-            on_verdict: Optional[Callable[[Verdict], None]] = None,
-            ) -> List[Verdict]:
-        """Drive a fleet of ``PlantStream``-likes for ``n_cycles`` cycles
-        (the :meth:`StreamEngine.run` contract: MSF reading layout,
-        simulation cost excluded from serve stats)."""
-        if len(streams) != self.n_streams:
-            raise ValueError(
-                f"fleet size {len(streams)} != engine streams "
-                f"{self.n_streams}")
-        if self.n_features != 2:
-            raise ValueError("run() reads the MSF (tb0_meas, wd_meas) "
-                             "layout; use ingest() directly for other "
-                             "feature sets")
-        out: List[Verdict] = []
-        readings = np.zeros((self.n_streams, self.n_features), np.float32)
-        for _ in range(n_cycles):
-            for i, s in enumerate(streams):
-                r = s.step()
-                readings[i, 0] = r.tb0_meas
-                readings[i, 1] = r.wd_meas
-            for v in self.ingest(readings):
-                out.append(v)
-                if on_verdict is not None:
-                    on_verdict(v)
-        return out
+        super().__init__(
+            [ServingUnit(name=g.name, model=g.model, params=g.params,
+                         n_streams=g.n_streams, head=g.head, fused=g.fused,
+                         adapt=g.adapt, what=f"group {g.name!r}: ")
+             for g in groups],
+            n_features=n_features, stride=stride, deadline_s=deadline_s,
+            norm_mean=norm_mean, norm_std=norm_std, backend=backend,
+            shard=shard, mesh=mesh, async_depth=async_depth)
 
     # -- introspection -----------------------------------------------------
 
     @property
+    def _groups(self):
+        """The per-group serving states (the core's unit list)."""
+        return self._units
+
+    @property
     def groups(self) -> List[Tuple[str, int, int]]:
         """(name, first_stream, n_streams) per group, in stream order."""
-        return [(st.name, st.offset, st.n_streams) for st in self._groups]
+        return [(st.name, st.offset, st.n_streams) for st in self._units]
 
     def group_windows(self) -> Dict[str, int]:
         """Verdicts emitted per group."""
-        return {st.name: st.windows for st in self._groups}
+        return {st.name: st.windows for st in self._units}
 
     def live_thresholds(self) -> Dict[str, Optional[float]]:
         """Each group's live threshold (None for threshold-free heads;
         equals the offline-calibrated cutoff until adaptation moves it)."""
-        return {st.name: st.live_threshold for st in self._groups}
+        return {st.name: st.live_threshold for st in self._units}

@@ -9,6 +9,14 @@ detector step** — ring-buffer scatter write, modular window unroll, and the
 batched MLP forward fused into a single XLA computation, with the ring arena
 donated across steps (the ICSML dataMem discipline).
 
+``StreamEngine`` is the one-model façade over the shared
+:class:`~repro.serving.core.ServingCore` pipeline (``GroupedStreamEngine``
+is the many-model one): ring-arena geometry, the pad-stream contract,
+warmup schedules, serve accounting, async double-buffering and the
+adapt-recalibration loop all live in ``serving/core.py`` — this module
+adds only the single-model constructor vocabulary and its historical
+introspection surface (``last_logits``, ``_ring``, ``_step``, ...).
+
 **Detector heads.** What a verdict *is* comes from a
 :class:`repro.sim.heads.DetectorHead`: the default :class:`ClassifierHead`
 reproduces the §7 classifier (argmax class + softmax probability), while a
@@ -50,16 +58,24 @@ Between verdict cycles the engine touches no device state at all: readings
 accumulate host-side and are scattered into the ring inside the next detector
 step, so a stride-10 fleet pays one dispatch per verdict cadence rather than
 one per scan cycle.  Per-window latency/deadline accounting follows the
-``ServeStats`` conventions of ``serving/continuous.py``.
+``ServeStats`` conventions of ``serving/continuous.py``; with
+``async_depth=1`` the engine double-buffers — ``ingest()`` dispatches step
+N and returns, harvesting step N-1's in-flight verdicts at the next ready
+boundary (see the ``serving/core.py`` docstring for the accounting
+semantics and ``flush()``).
 
 **Fleet sharding.** On a multi-device process the engine partitions the
-stream axis over a 1-D ``("data",)`` mesh (``launch.mesh.make_fleet_mesh``):
-the ring arena, the pending-reading block and the verdict logits are all
-``NamedSharding(mesh, P("data", ...))``, and the donated step runs under
-``shard_map`` so each device executes the detector step — including the
-single fused Pallas dispatch — on its own contiguous shard of streams, with
-no cross-device traffic on the hot path.  Fleet sizes not divisible by the
-device count are padded with silent zero streams (the *pad-stream contract*):
+stream axis over the ``"data"`` axis of a fleet mesh
+(``launch.mesh.make_fleet_mesh``): the ring arena, the pending-reading
+block and the verdict logits are all ``NamedSharding(mesh, P("data", ...))``,
+and the donated step runs under ``shard_map`` so each device executes the
+detector step — including the single fused Pallas dispatch — on its own
+contiguous shard of streams, with no cross-device traffic on the hot path.
+A 2-D ``("data", "model")`` mesh (``make_fleet_mesh(..., model_shards=m)``)
+additionally column-shards wide Dense layers over the model axis — one
+tiled ``all_gather`` per wide layer recombines the activations (see
+``serving/core.py``).  Fleet sizes not divisible by the data-axis device
+count are padded with silent zero streams (the *pad-stream contract*):
 pad rows ride through scatter/unroll/forward like real streams, their logits
 are sliced off before any verdict is emitted, and they never enter the
 serve accounting.  Sharding is off by default on a single-device process;
@@ -69,255 +85,21 @@ classic unsharded step.
 
 from __future__ import annotations
 
-import dataclasses
-import itertools
-import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Optional, Sequence, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs import msf_detector as spec
-from repro.core.layers import ACTIVATIONS
 from repro.core.model import Model, ParamTree
-from repro.kernels import ops
-from repro.launch.mesh import make_fleet_mesh
-from repro.sim.heads import ClassifierHead, DetectorHead, ScoreHead
+from repro.serving.core import (  # noqa: F401  (historical import surface)
+    AdaptConfig, LatencyReservoir, ServingCore, ServingUnit, StreamStats,
+    Verdict, _dense_batched, _layer_stack, _resolve_adapt)
+from repro.sim.heads import DetectorHead
 
 
-@dataclasses.dataclass
-class Verdict:
-    """One per-stream verdict on a completed window.
-
-    The payload depends on the engine's :class:`~repro.sim.heads.DetectorHead`:
-    a classifier head fills ``pred``/``prob`` (argmax class + its softmax
-    probability, ``score``/``threshold`` None); a reconstruction head fills
-    ``pred``/``score``/``threshold`` (pred = score over threshold, ``prob``
-    None).  ``pred != 0`` always means "anomalous".
-    """
-
-    stream: int               # stream index in the fleet
-    cycle: int                # scan cycle at which the window completed
-    pred: int                 # verdict class (0 = normal)
-    prob: Optional[float]     # classifier: softmax prob of the predicted class
-    latency_s: float          # window-completion -> verdict-on-host wall time
-    deadline_miss: bool       # latency_s > deadline_s
-    score: Optional[float] = None       # score heads: anomaly score
-    threshold: Optional[float] = None   # score heads: calibrated cutoff
-    group: Optional[str] = None         # model-group name (grouped fleets)
-
-
-# Default reservoir seeds come from a process-global counter, so every
-# engine's reservoir draws a distinct replacement sequence: with a shared
-# fixed seed, split engines (the grouped-vs-split bench) replaced the SAME
-# retained indices in lockstep, correlating their percentile estimates.
-_reservoir_seeds = itertools.count()
-
-
-class LatencyReservoir:
-    """Bounded uniform sample of verdict latencies (Vitter's Algorithm R).
-
-    A long-lived fleet engine emits one latency per verdict step forever; an
-    unbounded list leaks O(steps) host memory at millions of cycles.  The
-    reservoir retains the first ``capacity`` samples verbatim (append order
-    preserved, so short runs — tests, bench passes — see an exact list) and
-    thereafter replaces a uniformly random retained sample with probability
-    ``capacity / seen``, keeping the retained set a uniform draw from the
-    whole history — percentile estimates stay statistically valid while
-    memory stays O(capacity).
-
-    List-like where it matters: ``len`` / truthiness / iteration / indexing
-    and slicing cover every pre-reservoir consumer.  Slicing is only
-    meaningful while the retained items are the exact append-ordered list,
-    so once ``seen`` exceeds ``capacity`` (Algorithm R has replaced random
-    retained indices) slice access **raises** instead of silently returning
-    a uniform jumble — per-pass latency tails should come from
-    :meth:`StreamStats.reset_latencies` instead.
-
-    ``seed=None`` (the default) draws an engine-unique seed from a process
-    counter; pass an explicit seed for reproducible replacement sequences.
-    """
-
-    __slots__ = ("capacity", "seen", "seed", "_items", "_rng")
-
-    def __init__(self, capacity: int = 4096, seed: Optional[int] = None):
-        if capacity < 1:
-            raise ValueError(f"capacity must be >= 1, got {capacity}")
-        self.capacity = capacity
-        self.seen = 0                 # total appends ever observed
-        self.seed = next(_reservoir_seeds) if seed is None else seed
-        self._items: List[float] = []
-        self._rng = np.random.default_rng(self.seed)
-
-    def append(self, value: float) -> None:
-        self.seen += 1
-        if len(self._items) < self.capacity:
-            self._items.append(float(value))
-        else:
-            j = int(self._rng.integers(self.seen))
-            if j < self.capacity:
-                self._items[j] = float(value)
-
-    def __len__(self) -> int:
-        return len(self._items)
-
-    def __bool__(self) -> bool:
-        return bool(self._items)
-
-    def __iter__(self):
-        return iter(self._items)
-
-    def __getitem__(self, idx):
-        if isinstance(idx, slice) and self.seen > self.capacity:
-            raise ValueError(
-                f"latency tail slices are only exact below the reservoir "
-                f"capacity ({self.capacity}); after {self.seen} appends "
-                "Algorithm R has replaced random retained indices, so a "
-                "slice is a uniform jumble, not a pass tail — take "
-                "per-pass tails via StreamStats.reset_latencies()")
-        return self._items[idx]
-
-    def percentile(self, q: float) -> float:
-        return float(np.percentile(self._items, q)) if self._items else 0.0
-
-
-@dataclasses.dataclass
-class StreamStats:
-    """Aggregate serve accounting (ServeStats conventions).
-
-    ``latencies_s`` is a bounded :class:`LatencyReservoir`, not a list: the
-    engine appends one latency per verdict step for the life of the process,
-    and the reservoir keeps ``latency_p`` statistically valid at O(1)
-    memory (exact below its capacity)."""
-
-    steps: int                       # jitted detector steps executed
-    cycles: int                      # scan cycles ingested
-    windows: int                     # verdicts emitted (streams x steps)
-    deadline_misses: int
-    wall_s: float                    # total time spent inside ingest()
-    latencies_s: LatencyReservoir = dataclasses.field(
-        default_factory=LatencyReservoir)
-
-    def latency_p(self, q: float) -> float:
-        return self.latencies_s.percentile(q)
-
-    def reset_latencies(self) -> LatencyReservoir:
-        """Swap in a fresh (same-capacity, fresh-seed) reservoir and return
-        the retired one — the sanctioned way to take per-pass latency tails
-        (benchmark passes): tail *slices* of a reservoir past its capacity
-        are silently wrong, because Algorithm R replaces random retained
-        indices, and therefore raise."""
-        old = self.latencies_s
-        self.latencies_s = LatencyReservoir(capacity=old.capacity)
-        return old
-
-    def windows_per_s(self) -> float:
-        return self.windows / self.wall_s if self.wall_s > 0 else 0.0
-
-
-@dataclasses.dataclass(frozen=True)
-class AdaptConfig:
-    """Streaming threshold-recalibration policy (online drift adaptation).
-
-    ``capacity`` is the per-stream rolling score-ring length (the sketch
-    window: the live threshold is the conservative quantile of the trailing
-    ``<= capacity`` admitted scores per stream, pooled fleet-wide).
-    ``every`` recalibrates once per that many fired verdict steps; the
-    device-side state update runs every step regardless.  ``min_count``
-    holds the threshold at its offline-calibrated seed until that many
-    scores have been admitted fleet-wide (early tiny pools make noisy
-    quantiles).  ``headroom`` is the admission gate: scores at most
-    ``headroom`` times the live threshold enter the calibration state —
-    wide enough that gradual benign drift passes through the gate even when
-    it crosses the threshold, tight enough that attack scores (orders of
-    magnitude out) never poison the state.
-    """
-
-    capacity: int = 32
-    every: int = 1
-    min_count: int = 16
-    headroom: float = 4.0
-
-    def __post_init__(self):
-        if self.capacity < 1:
-            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
-        if self.every < 1:
-            raise ValueError(f"every must be >= 1, got {self.every}")
-        if self.min_count < 1:
-            raise ValueError(f"min_count must be >= 1, got {self.min_count}")
-        if self.headroom < 1.0:
-            raise ValueError(
-                f"headroom must be >= 1 (the gate must at least admit "
-                f"sub-threshold scores), got {self.headroom}")
-
-
-def _resolve_adapt(adapt: Union[bool, AdaptConfig, None],
-                   head: DetectorHead, what: str = "") -> Optional[AdaptConfig]:
-    """Validate and normalize an ``adapt=`` knob: None/False off, True the
-    default policy, an :class:`AdaptConfig` verbatim.  Adaptation requires a
-    calibrated :class:`ScoreHead` with a recorded ``target_fpr`` (the
-    streaming quantile chases the same operating point the offline
-    calibration chose)."""
-    if adapt is None or adapt is False:
-        return None
-    cfg = AdaptConfig() if adapt is True else adapt
-    if not isinstance(cfg, AdaptConfig):
-        raise ValueError(f"{what}adapt must be None/bool/AdaptConfig, "
-                         f"got {cfg!r}")
-    if not isinstance(head, ScoreHead):
-        raise ValueError(
-            f"{what}adapt=True needs a score-vs-threshold head (ScoreHead); "
-            f"the {head.name!r} head has no score distribution to "
-            "recalibrate on")
-    if head.threshold is None or head.target_fpr is None:
-        raise ValueError(
-            f"{what}adapt=True needs a calibrated head with a recorded "
-            "target_fpr to seed and steer the live threshold "
-            "(head.calibrate / the sim.detector trainers set both)")
-    return cfg
-
-
-def _layer_stack(model: Model, params: ParamTree) -> List[Tuple[Dict, str]]:
-    """(params, activation) per Dense node in schedule order."""
-    stack = ops.dense_stack(model, params)
-    if not stack:
-        raise ValueError("model has no Dense layers to serve")
-    return stack
-
-
-def _dense_batched(x: jax.Array, p: Dict, act: str, backend: str) -> jax.Array:
-    """One Dense layer over a (M, K) batch, float or quantized (§6.1)."""
-    if "qw" in p:
-        qw = p["qw"]
-        # Symmetric activation clip, matching quantize.quantize_tensor and
-        # layers._quantized_matvec (the scale decodes [-qmax, qmax]).
-        qmax = jnp.iinfo(qw.dtype).max
-        xq = jnp.clip(jnp.round(x / p["x_scale"]), -qmax, qmax)
-        scale = p["x_scale"] * p["w_scale"]
-        if qw.dtype == jnp.int8:
-            # SINT: native int8 dot product — the Pallas qmatmul MXU path.
-            y = ops.quantized_matmul(xq.astype(qw.dtype), qw, scale,
-                                     p.get("b"), backend=backend)
-        else:
-            # INT/DINT: int16/int32 products overflow int32 accumulation on
-            # TPU, so the integer arithmetic is emulated in f32 (storage
-            # compression is what these schemes buy — see layers.py).  No
-            # round-trip through the int dtype: int32's qmax is not f32-
-            # representable, so the cast would overflow at the clip rail.
-            y = xq @ qw.astype(jnp.float32) * scale
-            if p.get("b") is not None:
-                y = y + p["b"]
-    else:
-        y = x @ p["w"]
-        if "b" in p:
-            y = y + p["b"]
-    return ACTIVATIONS[act](y)
-
-
-class StreamEngine:
+class StreamEngine(ServingCore):
     """Batched sliding-window detector service over ``n_streams`` plants.
 
     Per scan cycle, call :meth:`ingest` with one ``(n_streams, n_features)``
@@ -337,7 +119,8 @@ class StreamEngine:
     requantizing in-kernel between layers.  ``fused=None`` (default)
     auto-selects; ``fused=False`` forces the per-layer loop (one
     qmatmul/matmul dispatch per layer); ``fused=True`` raises if the model
-    cannot fuse.
+    cannot fuse (or if the mesh model-shards the layers — the kernel cannot
+    span the model-axis gather).
 
     ``head`` selects the verdict semantics (module docstring): default
     :class:`~repro.sim.heads.ClassifierHead`; pass a calibrated
@@ -349,9 +132,10 @@ class StreamEngine:
     ``shard=None`` auto-enables it when the process has more than one device,
     ``shard=True`` forces it (a 1-device mesh still runs the shard_map path),
     ``shard=False`` pins the classic unsharded step.  ``mesh`` supplies the
-    device mesh (any mesh whose ``"data"`` axis carries the streams and whose
-    other axes, if present, have size 1); it defaults to
-    ``make_fleet_mesh()`` over every visible device.
+    device mesh (any mesh whose ``"data"`` axis carries the streams; a
+    ``"model"`` axis of any size column-shards wide layers, and other axes
+    must have size 1); it defaults to ``make_fleet_mesh()`` over every
+    visible device.
 
     ``adapt`` turns on streaming threshold recalibration (module docstring):
     ``True`` uses the default :class:`AdaptConfig`, an explicit config tunes
@@ -360,6 +144,10 @@ class StreamEngine:
     engine's ``live_threshold`` then tracks the sliding benign-score
     quantile and every verdict reports it.  Constructor-only knob like
     ``fused``/``head``.
+
+    ``async_depth=1`` opts into the double-buffered pipeline (module
+    docstring): verdicts bit-match sync mode, delivered one ready boundary
+    later; drain with :meth:`flush`.
     """
 
     def __init__(self, model: Model, params: ParamTree, *,
@@ -375,329 +163,64 @@ class StreamEngine:
                  head: Optional[DetectorHead] = None,
                  shard: Optional[bool] = None,
                  mesh: Optional[Mesh] = None,
-                 adapt: Union[bool, AdaptConfig, None] = None):
-        (input_size,) = model.input_shape
-        # Verdict-head routing: the head's device epilogue is traced into the
-        # jitted step below (sharded and unsharded) and its host epilogue
-        # turns step outputs into Verdict fields — the engine itself no
-        # longer assumes a softmax/argmax classifier.  Constructor-only knob
-        # (like ``fused``): both paths read the captured value, so a
-        # post-construction reassignment of ``.head`` changes neither — the
-        # already-traced step and the host epilogue can never desynchronize.
-        self.head = self._verdict_head = \
-            ClassifierHead() if head is None else head
-        # Window geometry is the head's contract: for every head but
-        # forecast the window IS the model input; the forecast head asks the
-        # ring for one extra reading (its prediction target) and slices the
-        # model input out of the window on device (head.prepare).
-        if window is None:
-            window = self._verdict_head.ring_window(input_size, n_features)
-        if self._verdict_head.model_input_size(window, n_features) \
-                != input_size:
-            raise ValueError(
-                f"window {window} x features {n_features} (head "
-                f"{self._verdict_head.name!r}) != model input {input_size}")
-        if not 1 <= stride:
-            raise ValueError("stride must be >= 1")
+                 adapt: Union[bool, AdaptConfig, None] = None,
+                 async_depth: int = 0):
+        super().__init__(
+            [ServingUnit(name=None, model=model, params=params,
+                         n_streams=n_streams, head=head, fused=fused,
+                         adapt=adapt, window=window)],
+            n_features=n_features, stride=stride, deadline_s=deadline_s,
+            norm_mean=norm_mean, norm_std=norm_std, backend=backend,
+            shard=shard, mesh=mesh, async_depth=async_depth)
+        unit = self._units[0]
         self.model = model
-        self.n_streams = n_streams
-        self.n_features = n_features
-        self.window = window
-        self.stride = stride
-        self.deadline_s = deadline_s
-        self._mean = np.asarray(norm_mean, np.float32)
-        self._std = np.asarray(norm_std, np.float32)
-        if self._mean.shape != (n_features,) or self._std.shape != (n_features,):
-            raise ValueError("norm_mean/norm_std must have one entry per feature")
-        self._stack = _layer_stack(model, params)
-        self._backend = backend
-        last = self._stack[-1][0]
-        n_out = (last["qw"] if "qw" in last else last["w"]).shape[1]
-        self._verdict_head.validate(input_size, n_out)
-        fusable = ops.model_fusable(model, self._stack)
-        if fused and not fusable:
-            reason = ops.fuse_reason(self._stack) or \
-                "the model graph has non-Dense nodes"
-            raise ValueError(f"fused=True but the model cannot fuse: {reason}")
-        # Constructor-only knob: captured as a local so a post-compile
-        # mutation of the attribute can't leave already-traced step shapes
-        # on a different path than freshly-traced ones.
-        self.fused = use_fused = fusable if fused is None else fused
+        self.window = unit.window
+        # Resolved constructor-only knobs, surfaced for introspection (the
+        # step bodies captured their own copies — reassigning these changes
+        # nothing, by design).
+        self.head = unit.head
+        self.fused = unit.use_fused
+        self.adapt = unit.adapt
+        self.shard_streams = unit.s_pad // self.n_shards
+        self._legacy_step = None
 
-        if shard is False and mesh is not None:
-            raise ValueError("shard=False contradicts an explicit mesh")
-        if mesh is None and (shard or (shard is None
-                                       and len(jax.devices()) > 1)):
-            # Never mesh wider than the fleet: pure-pad shards would burn a
-            # dispatch per device on zero streams every verdict cadence.
-            mesh = make_fleet_mesh(min(len(jax.devices()), n_streams))
-        if mesh is not None:
-            if "data" not in mesh.axis_names:
-                raise ValueError(f"fleet mesh needs a 'data' axis, got "
-                                 f"{mesh.axis_names}")
-            extra = [a for a in mesh.axis_names
-                     if a != "data" and mesh.shape[a] != 1]
-            if extra:
-                raise ValueError(
-                    f"non-'data' mesh axes must have size 1, got {extra}")
-        self.mesh = mesh
-        self.n_shards = 1 if mesh is None else mesh.shape["data"]
-        # Pad-stream contract: the arena is padded so every device owns an
-        # equal contiguous shard; pad rows are zero streams whose logits are
-        # sliced off before verdicts and never enter the accounting.
-        self._s_pad = -(-n_streams // self.n_shards) * self.n_shards
-        self.shard_streams = self._s_pad // self.n_shards
-        if mesh is not None:
-            self._arena_sharding = NamedSharding(mesh, P("data", None, None))
-            self._calib_sharding = NamedSharding(mesh, P("data", None))
-            self._counts_sharding = NamedSharding(mesh, P("data"))
-        else:
-            self._arena_sharding = None
-            self._calib_sharding = None
-            self._counts_sharding = None
+    # -- single-model introspection over the shared core -------------------
 
-        # Streaming recalibration (constructor-only, like fused/head): the
-        # live threshold starts at the offline-calibrated cutoff; score
-        # heads without adaptation keep it pinned there forever.
-        self.adapt = adapt_cfg = _resolve_adapt(adapt, self._verdict_head)
-        self.live_threshold = (
-            self._verdict_head.threshold
-            if isinstance(self._verdict_head, ScoreHead) else None)
+    @property
+    def last_logits(self) -> Optional[np.ndarray]:
+        """The last verdict step's (real-stream) outputs."""
+        return self.last_outputs.get(self._units[0].name)
 
-        w = window
-        verdict_head = self._verdict_head
+    @property
+    def live_threshold(self) -> Optional[float]:
+        return self._units[0].live_threshold
 
-        def _forward(win: jax.Array) -> jax.Array:
-            if use_fused:
-                return ops.fused_forward(win, self._stack, backend=backend)
-            x = win
-            for p, act in self._stack:
-                x = _dense_batched(x, p, act, backend)
-            return x
+    @live_threshold.setter
+    def live_threshold(self, value: Optional[float]) -> None:
+        self._units[0].live_threshold = value
 
-        def _body(ring, block, pos):
-            # block: (S, L, F) pending readings; L static per compile (the
-            # warmup block is `window` long, steady-state blocks
-            # `min(stride, window)` — ingest() trims longer spans host-side).
-            # The device trim below is defense in depth for direct callers:
-            # only the last `window` readings can ever land, and trimming
-            # before scattering keeps the indices provably unique
-            # (duplicate-index scatter-set order is undefined off-CPU).
-            length = block.shape[1]
-            offset = max(length - w, 0)
-            idx = (pos + offset + jnp.arange(length - offset)) % w
-            ring = ring.at[:, idx, :].set(block[:, offset:])
-            # window unroll, oldest reading first: the ring holds exactly the
-            # last `window` readings, ending at (pos + L - 1) mod window.
-            end = (pos + length) % w
-            widx = (end + jnp.arange(w)) % w
-            win = jnp.take(ring, widx, axis=1).reshape(ring.shape[0], -1)
-            # The head's device hooks run inside the jitted step: prepare is
-            # the model-input view of the window (identity except forecast,
-            # which slices off its target reading), and the epilogue reduces
-            # score-head outputs to an (S, 1) score HERE, on device — under
-            # sharding the host then gathers one float per stream, never
-            # fleet x 400 payloads.  (Row-local, so shard_map needs no new
-            # collectives.)
-            return ring, verdict_head.epilogue(
-                win, _forward(verdict_head.prepare(win)))
+    @property
+    def _s_pad(self) -> int:
+        return self._units[0].s_pad
 
-        if adapt_cfg is None:
-            _step = _body
-        else:
-            headroom = adapt_cfg.headroom
+    @property
+    def _ring(self) -> jax.Array:
+        return self._rings[0]
 
-            def _step(ring, calib, counts, block, pos, thr):
-                # The rolling benign-score state advances INSIDE the donated
-                # step: one row-local ring write per stream, gated on the
-                # live threshold — no extra dispatch, no new collectives.
-                ring, out = _body(ring, block, pos)
-                calib, counts = verdict_head.calib_update(
-                    calib, counts, out, thr, headroom)
-                return ring, calib, counts, out
+    @property
+    def _calib_ring(self) -> jax.Array:
+        return self._calibs[0]
 
-        if mesh is not None:
-            # Each device runs the *whole* step body on its shard — ring
-            # scatter, window unroll, the (fused Pallas) forward and the
-            # calibration-state write are all stream-local, so the mesh
-            # introduces zero collectives.  check_rep=False: pallas_call
-            # carries no replication rule.
-            if adapt_cfg is None:
-                in_specs = (P("data"), P("data"), P())
-                out_specs = (P("data"), P("data"))
-            else:
-                in_specs = (P("data"), P("data"), P("data"),
-                            P("data"), P(), P())
-                out_specs = (P("data"), P("data"), P("data"), P("data"))
-            _step = shard_map(_step, mesh=mesh,
-                              in_specs=in_specs, out_specs=out_specs,
-                              check_rep=False)
-        self._step = jax.jit(
-            _step, donate_argnums=0 if adapt_cfg is None else (0, 1, 2))
+    @property
+    def _calib_counts(self) -> jax.Array:
+        return self._counts[0]
 
-        self._ring = self._place(
-            jnp.zeros((self._s_pad, window, n_features), jnp.float32))
-        if adapt_cfg is not None:
-            calib0, counts0 = self._verdict_head.calib_state(
-                self._s_pad, adapt_cfg.capacity)
-            self._calib_ring = self._place(calib0, self._calib_sharding)
-            self._calib_counts = self._place(counts0, self._counts_sharding)
-        self._pos = 0                 # next ring write index (host-tracked)
-        self._count = 0               # scan cycles ingested
-        self._consumed = 0            # scan count at the last fired step
-        self._pending: List[np.ndarray] = []
-        self.last_logits: Optional[np.ndarray] = None
-        self.stats = StreamStats(steps=0, cycles=0, windows=0,
-                                 deadline_misses=0, wall_s=0.0)
-
-    def _place(self, arr, sharding=None) -> jax.Array:
-        """Commit an array to the fleet mesh (no-op unsharded); ``sharding``
-        defaults to the 3-D arena sharding."""
-        if self.mesh is None:
-            return jnp.asarray(arr)
-        return jax.device_put(
-            arr, self._arena_sharding if sharding is None else sharding)
-
-    def warmup(self) -> None:
-        """Compile both detector-step shapes (the warmup block is one full
-        window long, steady-state blocks are ``min(stride, window)`` long —
-        ingest() trims longer strides host-side) outside the serve clock, so
-        deadline accounting measures serving, not XLA.  Warmup arenas carry
-        the serve-time sharding, so the compiled executables are exactly the
-        sharded ones the steps will reuse."""
-        for length in sorted({self.window, min(self.stride, self.window)}):
-            ring = self._place(
-                jnp.zeros((self._s_pad, self.window, self.n_features),
-                          jnp.float32))
-            block = self._place(
-                jnp.zeros((self._s_pad, length, self.n_features), jnp.float32))
-            if self.adapt is None:
-                _, logits = self._step(ring, block, jnp.int32(0))
-            else:
-                calib0, counts0 = self._verdict_head.calib_state(
-                    self._s_pad, self.adapt.capacity)
-                *_, logits = self._step(
-                    ring, self._place(calib0, self._calib_sharding),
-                    self._place(counts0, self._counts_sharding),
-                    block, jnp.int32(0), jnp.float32(self.live_threshold))
-            jax.block_until_ready(logits)
-
-    # -- ingestion ---------------------------------------------------------
-
-    def _ready(self) -> bool:
-        return (self._count >= self.window
-                and (self._count - self.window) % self.stride == 0)
-
-    def ingest(self, readings: np.ndarray) -> List[Verdict]:
-        """One scan cycle of fleet readings -> verdicts (usually empty).
-
-        ``readings`` is ``(n_streams, n_features)`` raw sensor values; the
-        engine applies the PLC-side normalization itself.
-        """
-        t0 = time.perf_counter()
-        readings = np.asarray(readings, np.float32)
-        if readings.shape != (self.n_streams, self.n_features):
-            raise ValueError(
-                f"expected ({self.n_streams}, {self.n_features}) readings, "
-                f"got {readings.shape}")
-        self._pending.append((readings - self._mean) / self._std)
-        self._count += 1
-        self.stats.cycles += 1
-        # stride > window: readings older than the last `window` can never
-        # land in the ring, so drop them HERE — host memory, host->device
-        # transfer and the compiled block shapes all stay capped at `window`
-        # (mirrors GroupedStreamEngine's _pending pruning).
-        if len(self._pending) > self.window:
-            del self._pending[:len(self._pending) - self.window]
-
-        verdicts: List[Verdict] = []
-        if self._ready():
-            # span = cycles elapsed since the last fired step; the pruned
-            # pending list holds exactly the last min(span, window) readings.
-            span = self._count - self._consumed
-            block = np.stack(self._pending, axis=1)        # (S, L<=W, F)
-            self._pending.clear()
-            # The trimmed block starts (span - L) cycles after the untrimmed
-            # one would have: advance the write position past the dropped
-            # readings so ring geometry matches the untrimmed schedule.
-            eff_pos = (self._pos + (span - block.shape[1])) % self.window
-            if self._s_pad != self.n_streams:
-                block = np.pad(
-                    block, ((0, self._s_pad - self.n_streams), (0, 0), (0, 0)))
-            if self.adapt is None:
-                self._ring, logits = self._step(
-                    self._ring, self._place(block), jnp.int32(eff_pos))
-            else:
-                self._ring, self._calib_ring, self._calib_counts, logits = \
-                    self._step(self._ring, self._calib_ring,
-                               self._calib_counts, self._place(block),
-                               jnp.int32(eff_pos),
-                               jnp.float32(self.live_threshold))
-            self._pos = (self._pos + span) % self.window
-            self._consumed = self._count
-            self.stats.steps += 1
-            # Gathers each device's shard of logits to the host; pad-stream
-            # rows are dropped here and never surface as verdicts.
-            logits = np.asarray(jax.block_until_ready(logits))
-            logits = logits[:self.n_streams]
-            self.last_logits = logits
-            # Streaming recalibration: re-host the offline score-then-
-            # quantile sequence on the rolling state (pad rows sliced off —
-            # zero streams still score, so they must stay out of the pool).
-            if self.adapt is not None \
-                    and self.stats.steps % self.adapt.every == 0:
-                thr = self._verdict_head.streaming_threshold(
-                    np.asarray(self._calib_ring)[:self.n_streams],
-                    np.asarray(self._calib_counts)[:self.n_streams],
-                    min_count=self.adapt.min_count)
-                if thr is not None:
-                    self.live_threshold = thr
-            latency = time.perf_counter() - t0
-            miss = latency > self.deadline_s
-            # Host epilogue via the head: classifier -> argmax/softmax,
-            # score heads -> score vs the engine's LIVE threshold (the
-            # offline cutoff unless adaptation has moved it).
-            pred, prob, score, thr = self._verdict_head.host_verdicts(
-                logits, threshold=self.live_threshold)
-            cycle = self._count - 1
-            for i in range(self.n_streams):
-                verdicts.append(Verdict(
-                    stream=i, cycle=cycle, pred=int(pred[i]),
-                    prob=None if prob is None else float(prob[i]),
-                    latency_s=latency, deadline_miss=miss,
-                    score=None if score is None else float(score[i]),
-                    threshold=thr))
-            self.stats.windows += self.n_streams
-            self.stats.deadline_misses += int(miss) * self.n_streams
-            self.stats.latencies_s.append(latency)
-
-        self.stats.wall_s += time.perf_counter() - t0
-        return verdicts
-
-    def run(self, streams: Sequence[Any], n_cycles: int,
-            on_verdict: Optional[Callable[[Verdict], None]] = None,
-            ) -> List[Verdict]:
-        """Drive a fleet of ``PlantStream``-likes for ``n_cycles`` cycles.
-
-        Each stream's ``step()`` must yield an object with ``tb0_meas`` /
-        ``wd_meas`` attributes (simulation cost is *not* counted into the
-        engine's serve stats — only ingest time is).
-        """
-        if len(streams) != self.n_streams:
-            raise ValueError(
-                f"fleet size {len(streams)} != engine streams {self.n_streams}")
-        if self.n_features != 2:
-            raise ValueError("run() reads the MSF (tb0_meas, wd_meas) layout; "
-                             "use ingest() directly for other feature sets")
-        out: List[Verdict] = []
-        readings = np.zeros((self.n_streams, self.n_features), np.float32)
-        for _ in range(n_cycles):
-            for i, s in enumerate(streams):
-                r = s.step()
-                readings[i, 0] = r.tb0_meas
-                readings[i, 1] = r.wd_meas
-            for v in self.ingest(readings):
-                out.append(v)
-                if on_verdict is not None:
-                    on_verdict(v)
-        return out
+    @property
+    def _step(self):
+        """The classic single-model step — ``(ring, block, pos)`` without
+        adaptation, ``(ring, calib, counts, block, pos, thr)`` with — built
+        from the exact unit body the serving steps run (the dispatch-count
+        and out-shape suites trace this)."""
+        if self._legacy_step is None:
+            self._legacy_step = self._single_step_view()
+        return self._legacy_step

@@ -1,0 +1,103 @@
+"""The unified serving core: one implementation, shared guards.
+
+``StreamEngine`` and ``GroupedStreamEngine`` are thin façades over
+``ServingCore`` — ingest/run/warmup/flush and the span/eff_pos/pad
+machinery exist exactly once.  This suite pins the structural claim and
+the guards both engines must now share word-for-word.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving import GroupedStreamEngine, ModelGroup, StreamEngine
+from repro.serving.core import ServingCore
+from test_fused import small_detector
+from test_streams import identity_probe
+
+
+def stream_engine(**kw):
+    model, params = small_detector("REAL", seed=0)
+    args = dict(n_streams=3, n_features=2, window=4, stride=3, shard=False)
+    args.update(kw)
+    return StreamEngine(model, params, **args)
+
+
+def grouped_engine(**kw):
+    m1, p1 = small_detector("REAL", seed=0)
+    m2, p2 = small_detector("SINT", seed=1)
+    args = dict(n_features=2, stride=3, shard=False)
+    args.update(kw)
+    return GroupedStreamEngine(
+        [ModelGroup("a", m1, p1, 2), ModelGroup("b", m2, p2, 1)], **args)
+
+
+class _Stream:
+    def __init__(self):
+        self.rng = np.random.default_rng(0)
+
+    def step(self):
+        s = self
+
+        class R:
+            tb0_meas = float(s.rng.normal())
+            wd_meas = float(s.rng.normal())
+
+        return R()
+
+
+class TestSingleImplementation:
+    """Both engines execute the core's methods, not copies of them."""
+
+    @pytest.mark.parametrize("method",
+                             ("ingest", "run", "warmup", "flush",
+                              "_finalize", "_get_step", "_schedule_keys"))
+    def test_engines_share_core_methods(self, method):
+        assert getattr(StreamEngine, method) is getattr(ServingCore, method)
+        assert getattr(GroupedStreamEngine, method) is \
+            getattr(ServingCore, method)
+
+    def test_facades_are_core_subclasses(self):
+        assert issubclass(StreamEngine, ServingCore)
+        assert issubclass(GroupedStreamEngine, ServingCore)
+
+
+class TestSharedGuards:
+    @pytest.mark.parametrize("make", (stream_engine, grouped_engine))
+    def test_run_fleet_size_guard(self, make):
+        eng = make()
+        with pytest.raises(ValueError, match="fleet size 1 != engine "
+                                             "streams 3"):
+            eng.run([_Stream()], 5)
+
+    @pytest.mark.parametrize("make", (stream_engine, grouped_engine))
+    def test_run_feature_width_guard(self, make):
+        """run() reads the MSF 2-feature layout; other widths must point
+        users at ingest() — identically for both engines."""
+        if make is stream_engine:
+            model, params = identity_probe(4, 3)
+            eng = StreamEngine(model, params, n_streams=2, n_features=3,
+                               window=4, stride=3, shard=False,
+                               norm_mean=(0.0,) * 3, norm_std=(1.0,) * 3)
+        else:
+            model, params = identity_probe(4, 3)
+            eng = GroupedStreamEngine(
+                [ModelGroup("g", model, params, 2)], n_features=3, stride=3,
+                shard=False, norm_mean=(0.0,) * 3, norm_std=(1.0,) * 3)
+        with pytest.raises(ValueError, match="use ingest\\(\\) directly"):
+            eng.run([_Stream(), _Stream()], 5)
+
+    @pytest.mark.parametrize("make", (stream_engine, grouped_engine))
+    def test_fresh_stats_latency_percentile_raises(self, make):
+        """A just-built engine has no latencies: latency_p must raise, not
+        report a perfect 0 ms tail."""
+        eng = make()
+        with pytest.raises(ValueError, match="empty latency reservoir"):
+            eng.stats.latency_p(99)
+
+    @pytest.mark.parametrize("make", (stream_engine, grouped_engine))
+    def test_latency_percentile_after_service(self, make):
+        eng = make()
+        rng = np.random.default_rng(5)
+        for c in range(6):
+            eng.ingest(rng.normal(size=(3, 2)).astype(np.float32))
+        assert eng.stats.latency_p(99) > 0.0

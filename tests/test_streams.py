@@ -240,7 +240,11 @@ class TestLatencyReservoir:
         with pytest.raises(ValueError):
             LatencyReservoir(capacity=0)
         r = LatencyReservoir()
-        assert len(r) == 0 and not r and r.percentile(99) == 0.0
+        assert len(r) == 0 and not r
+        # An empty reservoir has no latency distribution: the old 0.0
+        # return read as a perfect 0 ms p99 for an engine that never fired.
+        with pytest.raises(ValueError, match="empty latency reservoir"):
+            r.percentile(99)
 
     def test_engine_stats_hold_memory_over_long_serve(self):
         """The engine-level invariant: steps can exceed the reservoir
