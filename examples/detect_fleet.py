@@ -100,25 +100,36 @@ from repro.sim.msf import SCAN_DT
 from repro.serving import GroupedStreamEngine, ModelGroup, StreamEngine
 
 
-def train_and_port(fast: bool, quant: str, detector: str):
+def _budget(fast: bool, smoke: bool):
+    """(normal_cycles, attack_cycles, epochs, patience) for a training run.
+    ``--smoke`` is the CI-subprocess budget: just enough data/steps to prove
+    the pipeline end to end in seconds, not a useful detector."""
+    if smoke:
+        # Floor: the score heads refuse to train/calibrate on < 768 benign
+        # windows, and the mixed fleet trains an autoencoder too.
+        return 5_200, 800, 2, 2
     scale = 0.2 if fast else 0.5
+    return int(42_000 * scale), int(5_700 * scale), 30 if fast else 60, 8
+
+
+def train_and_port(fast: bool, quant: str, detector: str, smoke: bool = False):
+    normal, attack, epochs, patience = _budget(fast, smoke)
     print("== dataset + training (established-framework stage) ==")
     # jittered normal plants in training: the fleet is heterogeneous, and
     # per-plant operating-point spread must read as benign
-    x, y = build_dataset(normal_cycles=int(42_000 * scale),
-                         attack_cycles=int(5_700 * scale), stride=8, seed=0,
-                         jitter=0.015, jitter_plants=4)
+    x, y = build_dataset(normal_cycles=normal, attack_cycles=attack,
+                         stride=8, seed=0, jitter=0.015, jitter_plants=4)
     head = None
     if detector == "ae":
-        model, res = train_autoencoder(x, y, epochs=30 if fast else 60,
-                                       patience=8, lr=1e-3)
+        model, res = train_autoencoder(x, y, epochs=epochs,
+                                       patience=patience, lr=1e-3)
         head = res.head
         print(f"val mse {res.best_val_mse:.6f}  threshold {res.threshold:.6f}"
               f"  calib FPR {res.calib_fpr:.4f}"
               f"  attack-window detection {res.test_detection_rate:.4f}")
     else:
-        model, res = train_detector(x, y, epochs=30 if fast else 60,
-                                    patience=8, lr=1e-3)
+        model, res = train_detector(x, y, epochs=epochs,
+                                    patience=patience, lr=1e-3)
         print(f"val acc {res.best_val_acc:.4f}  test acc {res.test_acc:.4f}")
     print("== porting to ICSML (§4.3) ==")
     with tempfile.TemporaryDirectory() as tmp:
@@ -158,23 +169,22 @@ def _port_and_quantize(model, res, head, quant, x, y):
     return model, params, head
 
 
-def train_mixed(fast: bool, quant: str):
+def train_mixed(fast: bool, quant: str, smoke: bool = False):
     """Train/port/quantize all four detector types for the grouped fleet."""
-    scale = 0.2 if fast else 0.5
-    epochs = 30 if fast else 60
+    normal, attack, epochs, patience = _budget(fast, smoke)
     print("== dataset + training x4 (mixed model-group fleet) ==")
-    x, y = build_dataset(normal_cycles=int(42_000 * scale),
-                         attack_cycles=int(5_700 * scale), stride=8, seed=0,
-                         jitter=0.015, jitter_plants=4)
+    x, y = build_dataset(normal_cycles=normal, attack_cycles=attack,
+                         stride=8, seed=0, jitter=0.015, jitter_plants=4)
     trained = []
-    model, res = train_detector(x, y, epochs=epochs, patience=8, lr=1e-3)
+    model, res = train_detector(x, y, epochs=epochs, patience=patience,
+                                lr=1e-3)
     print(f"  mlp:      val acc {res.best_val_acc:.4f}  "
           f"test acc {res.test_acc:.4f}")
     trained.append(("mlp", model, res, None))
     for name, trainer in (("ae", train_autoencoder),
                           ("margin", train_one_class),
                           ("forecast", train_forecaster)):
-        model, res = trainer(x, y, epochs=epochs, patience=8, lr=1e-3)
+        model, res = trainer(x, y, epochs=epochs, patience=patience, lr=1e-3)
         print(f"  {name + ':':<9} threshold {res.threshold:.6f}  "
               f"calib FPR {res.calib_fpr:.4f}  "
               f"attack-window detection {res.test_detection_rate:.4f}")
@@ -245,6 +255,10 @@ def main():
                          "score-head detectors")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fast", action="store_true", help="small training budget")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-subprocess budget: tiny dataset, 2 epochs, and "
+                         "(unless overridden) 4 plants x 240 cycles — proves "
+                         "the pipeline, not the detector")
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the fleet over this many devices "
                          "(host devices are fanned out automatically)")
@@ -259,6 +273,12 @@ def main():
     if args.list:
         print(scenario_table())
         return
+
+    if args.smoke:
+        if args.plants == spec.FLEET_STREAMS:
+            args.plants = 4
+        if args.cycles == 1600:
+            args.cycles = 240
 
     names = (list(SCENARIOS) if args.scenarios == "all"
              else [s.strip() for s in args.scenarios.split(",")])
@@ -281,7 +301,7 @@ def main():
     shard_kw = {"mesh": mesh} if mesh is not None else {"shard": False}
     async_note = ", async double-buffered" if args.async_serve else ""
     if args.mixed:
-        detectors = train_mixed(args.fast, args.quant)
+        detectors = train_mixed(args.fast, args.quant, args.smoke)
         if args.plants < len(detectors):
             ap.error(f"--mixed needs at least {len(detectors)} plants")
         base, extra = divmod(args.plants, len(detectors))
@@ -300,7 +320,7 @@ def main():
               f"{async_note}) ==")
     else:
         model, params, head = train_and_port(args.fast, args.quant,
-                                             args.detector)
+                                             args.detector, args.smoke)
         if args.drift and head is None:
             print("note: --drift serves a drifting fleet, but the "
                   "classifier has no score threshold to recalibrate "

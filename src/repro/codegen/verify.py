@@ -1,0 +1,168 @@
+"""Verification harness: exported ST vs. the JAX serving oracle.
+
+The deployment story only holds if the PLC-side block decides exactly what
+the fleet engine decides, so this module owns the replay machinery the test
+suite and ``examples/export_st.py`` share:
+
+* :func:`window_starts` / :func:`stream_windows` — the serving ring's window
+  schedule replayed in plain numpy: a window completes at cycle ``c`` (the
+  0-based index of its last reading) when ``c + 1 >= window`` and
+  ``(c + 1 - window) % stride == 0`` — exactly when ``ServingCore`` fires —
+  and spans ``readings[c + 1 - window : c + 1]`` oldest-first with features
+  interleaved per reading, the unrolled-ring layout the engine feeds the
+  model.
+* :func:`emulate_stream` — one stream's raw readings through the emulated
+  FUNCTION_BLOCK, one batched interpreter pass over all of its windows.
+* :func:`sequential_f32_mse` — the **score contract** oracle.  A PLC sums
+  the squared errors sequentially in f32; XLA's row reduction reassociates,
+  so the two agree only to epsilon even over bit-identical inputs.  The
+  suite therefore asserts three things about a SINT score-head export: the
+  emulated score bit-matches THIS oracle over the bit-exact SINT model
+  outputs, the verdict (strict ``score > threshold``) matches the engine
+  exactly, and the engine's own score agrees to tight relative tolerance.
+* :func:`run_engine` — the `StreamEngine` side of the comparison: drive raw
+  fleet readings cycle by cycle and collect the per-window `Verdict`s.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.codegen.emulator import STFunctionBlock
+from repro.codegen.st import STExport
+
+
+def window_starts(n_cycles: int, window: int, stride: int) -> List[int]:
+    """Cycles (0-based last-reading index) at which a verdict window
+    completes — `ServingCore`'s ready schedule (``Verdict.cycle`` values)."""
+    return [c for c in range(n_cycles)
+            if c + 1 >= window and (c + 1 - window) % stride == 0]
+
+
+def stream_windows(readings: np.ndarray, window: int,
+                   stride: int) -> np.ndarray:
+    """All completed windows of one stream's ``(n_cycles, F)`` readings as a
+    ``(n_windows, window * F)`` batch — oldest reading first, features
+    interleaved per reading (the engine's unrolled-ring model input)."""
+    readings = np.asarray(readings, np.float32)
+    n_cycles, n_features = readings.shape
+    rows = [readings[c + 1 - window:c + 1].reshape(-1)
+            for c in window_starts(n_cycles, window, stride)]
+    return (np.stack(rows) if rows
+            else np.zeros((0, window * n_features), np.float32))
+
+
+def normalize_windows(windows: np.ndarray, mean, std) -> np.ndarray:
+    """The engines' host-side ingest normalization, replayed per reading:
+    ``(x - mean) / std`` elementwise in f32 (two IEEE ops, the same two the
+    exported block applies when normalization is baked in)."""
+    windows = np.asarray(windows, np.float32)
+    f = len(mean)
+    shaped = windows.reshape(windows.shape[0], -1, f)
+    out = (shaped - np.asarray(mean, np.float32)) / np.asarray(std,
+                                                               np.float32)
+    return out.reshape(windows.shape).astype(np.float32)
+
+
+def sequential_f32_mse(y: np.ndarray, target: np.ndarray) -> np.ndarray:
+    """Per-row mean squared error accumulated SEQUENTIALLY in f32 — the
+    arithmetic a scan-cycle FOR loop performs, and the score oracle SINT
+    score-head exports are bit-checked against."""
+    y = np.asarray(y, np.float32)
+    target = np.asarray(target, np.float32)
+    acc = np.zeros(y.shape[0], np.float32)
+    for i in range(y.shape[1]):
+        t = (y[:, i] - target[:, i]).astype(np.float32)
+        acc = (acc + t * t).astype(np.float32)
+    return (acc / np.float32(y.shape[1])).astype(np.float32)
+
+
+def _np_act(act: str, y: np.ndarray) -> np.ndarray:
+    if act == "relu":
+        return np.maximum(y, np.float32(0.0))
+    if act == "linear":
+        return y
+    if act == "sigmoid":
+        return (np.float32(1.0)
+                / (np.float32(1.0) + np.exp(-y))).astype(np.float32)
+    if act == "tanh":
+        return np.tanh(y).astype(np.float32)
+    raise ValueError(f"activation {act!r} has no numpy reference here")
+
+
+def numpy_mlp_ref(x: np.ndarray, stack) -> np.ndarray:
+    """The per-layer §6.1 reference in pure numpy — the **bit-oracle** for
+    SINT exports.
+
+    Semantics are ``ref.dense_layer_ref`` run eagerly: requantize is two
+    separately-rounded f32 ops (``f32(acc) * f32(x_scale * w_scale)`` then
+    ``+ b``).  The eager JAX reference bit-matches this; a *jitted* reference
+    does NOT once biases are nonzero — XLA contracts the mul+add into an
+    FMA, shifting last bits — and neither does the padded fused kernel.  A
+    PLC executes the two-op form, so this is the arithmetic the emitted ST
+    is held bit-exact to; XLA-side programs agree to an ulp.
+    """
+    out = np.asarray(x, np.float32)
+    for p, act in stack:
+        p = {k: (None if v is None else np.asarray(v))
+             for k, v in p.items()}
+        if "qw" in p:
+            qw = p["qw"]
+            if qw.dtype != np.int8:
+                raise ValueError(
+                    "numpy_mlp_ref covers REAL and SINT stacks only (INT/"
+                    "DINT accumulate in f32 on the JAX side)")
+            xs = np.float32(p["x_scale"])
+            t = (out / xs).astype(np.float32)
+            xq = np.clip(np.rint(t), -127, 127).astype(np.int32)
+            acc = xq @ qw.astype(np.int32)
+            s = (xs * p["w_scale"].astype(np.float32)).astype(np.float32)
+            y = (acc.astype(np.float32) * s).astype(np.float32)
+        else:
+            y = (out @ p["w"].astype(np.float32)).astype(np.float32)
+        if p.get("b") is not None:
+            y = (y + p["b"].astype(np.float32)).astype(np.float32)
+        out = _np_act(act, y)
+    return out
+
+
+def emulate_stream(export: STExport, readings: np.ndarray, *, stride: int,
+                   fb: Optional[STFunctionBlock] = None,
+                   ) -> Dict[str, np.ndarray]:
+    """Replay one stream's raw ``(n_cycles, F)`` readings through the
+    emulated block: every completed window in one batched FB pass.
+
+    Returns the block's VAR_OUTPUTs batched over windows plus ``"cycle"``
+    (the engine cycle each window completed at — `Verdict.cycle`).  The
+    export must have ingest normalization baked in if the engine the result
+    is compared against normalizes (it does) — pass raw readings either way.
+    """
+    wins = stream_windows(readings, export.window, stride)
+    cycles = window_starts(len(readings), export.window, stride)
+    if fb is None:
+        fb = STFunctionBlock(export.text)
+    out = fb.call({"X": wins}) if len(wins) else {
+        d.name: np.zeros((0,) if d.lo is None else (0, d.size))
+        for d in STFunctionBlock(export.text).outputs}
+    out["cycle"] = np.asarray(cycles, np.int64)
+    return out
+
+
+def run_engine(model, params, readings: np.ndarray, *, stride: int,
+               head=None, backend: str = "auto") -> list:
+    """Drive a `StreamEngine` over ``(n_cycles, S, F)`` raw fleet readings
+    cycle by cycle (unsharded, synchronous — the bit-reference serving
+    configuration) and return every `Verdict` in emission order."""
+    from repro.serving.streams import StreamEngine
+
+    readings = np.asarray(readings, np.float32)
+    n_cycles, n_streams, n_features = readings.shape
+    engine = StreamEngine(model, params, n_streams=n_streams,
+                          n_features=n_features, stride=stride, head=head,
+                          backend=backend, shard=False)
+    verdicts = []
+    for t in range(n_cycles):
+        verdicts.extend(engine.ingest(readings[t]))
+    return verdicts

@@ -165,6 +165,29 @@ class DetectorHead:
         so verdicts track drift while the head stays frozen."""
         raise NotImplementedError
 
+    # -- IEC 61131-3 Structured Text export (repro.codegen.st) --------------
+    #
+    # The ST exporter asks the head for the *verdict epilogue* of the emitted
+    # FUNCTION_BLOCK: the statements that turn the model-output array into
+    # the PLC-side verdict variables, mirroring epilogue/host_verdicts.  The
+    # writer is duck-typed (codegen.st.STWriter) so this module never imports
+    # the codegen package; ``ctx`` is a codegen.st.STContext carrying the
+    # array names and widths of the surrounding block.
+
+    def st_verdict_outputs(self) -> Tuple[str, ...]:
+        """Names of the VAR_OUTPUTs the head's ST epilogue produces, in
+        Verdict-field order — the verification harness compares exactly
+        these against the engine's verdicts."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no Structured Text export epilogue")
+
+    def st_epilogue(self, w, ctx) -> None:
+        """Write the verdict epilogue into an ST writer: declare the verdict
+        VAR_OUTPUTs and emit the statements computing them from the model
+        output array ``ctx.y`` (and the model-input view ``ctx.x``)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no Structured Text export epilogue")
+
 
 @dataclasses.dataclass(frozen=True)
 class ClassifierHead(DetectorHead):
@@ -187,6 +210,35 @@ class ClassifierHead(DetectorHead):
         pred = out.argmax(axis=-1)
         prob = softmax_np(out)[np.arange(len(out)), pred]
         return pred.astype(np.int64), prob, None, None
+
+    def st_verdict_outputs(self):
+        return ("PRED", "CONF")
+
+    def st_epilogue(self, w, ctx):
+        # Argmax with strict `>` keeps the FIRST maximum — np.argmax's tie
+        # rule — and the softmax probability of the argmax class collapses to
+        # 1/sum(exp(y_i - max)): exp(0) = 1.0 exactly, so the winning term
+        # needs no batch-varying index, and the sequential f32 sum matches
+        # softmax_np for the few-class heads this exports.
+        w.output("PRED", "DINT")
+        w.output("CONF", "REAL")
+        w.var("I", "DINT")
+        w.var("BEST", "REAL")
+        w.var("ESUM", "REAL")
+        w.comment("verdict: argmax class + softmax confidence of that class")
+        w.line(f"BEST := {ctx.y}[0];")
+        w.line("PRED := 0;")
+        w.line(f"FOR I := 1 TO {ctx.n_outputs - 1} DO")
+        w.line(f"    IF {ctx.y}[I] > BEST THEN")
+        w.line(f"        BEST := {ctx.y}[I];")
+        w.line("        PRED := I;")
+        w.line("    END_IF;")
+        w.line("END_FOR;")
+        w.line("ESUM := 0.0;")
+        w.line(f"FOR I := 0 TO {ctx.n_outputs - 1} DO")
+        w.line(f"    ESUM := ESUM + EXP({ctx.y}[I] - BEST);")
+        w.line("END_FOR;")
+        w.line("CONF := 1.0 / ESUM;")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,6 +311,38 @@ class ScoreHead(DetectorHead):
         score = out[:, 0] if out.ndim == 2 else out
         pred = (score > thr).astype(np.int64)
         return pred, None, score, thr
+
+    def st_verdict_outputs(self):
+        return ("PRED", "SCORE", "THRESHOLD")
+
+    def st_score(self, w, ctx) -> None:
+        """Write the statements assigning the head's anomaly score to the
+        REAL output ``SCORE`` — sequential f32 accumulation, the ST-side
+        contract the verification oracle replays."""
+        raise NotImplementedError
+
+    def st_epilogue(self, w, ctx):
+        if self.threshold is None:
+            raise ValueError(
+                f"{type(self).__name__} has no threshold; calibrate before "
+                "exporting to Structured Text (the cutoff is baked into the "
+                "block as a constant)")
+        w.output("SCORE", "REAL")
+        w.output("PRED", "DINT")
+        w.output("THRESHOLD", "REAL")
+        # The calibrated cutoff is an actual f32 calibration score
+        # (conservative_quantile returns an order statistic), so snapping to
+        # f32 is exact and the strict REAL compare below decides identically
+        # to the engine's float64 `score > threshold`.
+        w.const("THR", "REAL", float(np.float32(self.threshold)))
+        self.st_score(w, ctx)
+        w.comment("verdict: strict score > calibrated threshold")
+        w.line("THRESHOLD := THR;")
+        w.line("IF SCORE > THR THEN")
+        w.line("    PRED := 1;")
+        w.line("ELSE")
+        w.line("    PRED := 0;")
+        w.line("END_IF;")
 
     # -- streaming recalibration (online drift adaptation) -----------------
 
@@ -345,6 +429,17 @@ class ReconstructionHead(ScoreHead):
         """Per-window anomaly scores from batched reconstructions."""
         return self.batch_scores(recon, x)
 
+    def st_score(self, w, ctx):
+        w.var("I", "DINT")
+        w.var("T", "REAL")
+        w.comment("anomaly score: mean squared reconstruction error")
+        w.line("SCORE := 0.0;")
+        w.line(f"FOR I := 0 TO {ctx.n_outputs - 1} DO")
+        w.line(f"    T := {ctx.y}[I] - {ctx.x}[I];")
+        w.line("    SCORE := SCORE + T * T;")
+        w.line("END_FOR;")
+        w.line(f"SCORE := SCORE / {w.real(float(ctx.n_outputs))};")
+
 
 @dataclasses.dataclass(frozen=True)
 class MarginHead(ScoreHead):
@@ -375,6 +470,20 @@ class MarginHead(ScoreHead):
 
     def batch_scores(self, outputs, x):
         return jnp.mean(jnp.square(outputs - self._center()), axis=-1)
+
+    def st_score(self, w, ctx):
+        w.var("I", "DINT")
+        w.var("T", "REAL")
+        w.const("CENTER", "REAL",
+                [float(np.float32(c)) for c in self.center])
+        w.comment("anomaly score: mean squared distance from the benign "
+                  "center")
+        w.line("SCORE := 0.0;")
+        w.line(f"FOR I := 0 TO {ctx.n_outputs - 1} DO")
+        w.line(f"    T := {ctx.y}[I] - CENTER[I];")
+        w.line("    SCORE := SCORE + T * T;")
+        w.line("END_FOR;")
+        w.line(f"SCORE := SCORE / {w.real(float(ctx.n_outputs))};")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -423,3 +532,17 @@ class ForecastHead(ScoreHead):
         # x is the FULL window batch; the target is its last reading.
         return jnp.mean(
             jnp.square(outputs - x[..., -self.n_features:]), axis=-1)
+
+    def st_score(self, w, ctx):
+        # ctx.x is the FULL window array (the block keeps the extra ring
+        # reading); the forecast target is its last reading, starting at the
+        # model-input width the body consumed.
+        w.var("I", "DINT")
+        w.var("T", "REAL")
+        w.comment("anomaly score: mean squared next-step forecast error")
+        w.line("SCORE := 0.0;")
+        w.line(f"FOR I := 0 TO {ctx.n_outputs - 1} DO")
+        w.line(f"    T := {ctx.y}[I] - {ctx.x}[I + {ctx.in_width}];")
+        w.line("    SCORE := SCORE + T * T;")
+        w.line("END_FOR;")
+        w.line(f"SCORE := SCORE / {w.real(float(ctx.n_outputs))};")

@@ -9,6 +9,18 @@ import numpy as np
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite the golden Structured Text exports under tests/golden/"
+             " instead of comparing against them")
+
+
+@pytest.fixture
+def update_golden(request):
+    return request.config.getoption("--update-golden")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,61 @@
+"""Subprocess smoke tests for the example CLIs.
+
+Each example is a user-facing entry point; these prove they launch, run
+their quick paths end to end, and exit 0 — with real subprocesses, the way
+CI and users invoke them.  Budgets are the ``--smoke`` tiers the examples
+expose for exactly this purpose.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+EXAMPLES = os.path.join(REPO, "examples")
+
+
+def _run(script, *argv, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, os.path.join(EXAMPLES, script), *argv],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+def test_detect_fleet_list():
+    res = _run("detect_fleet.py", "--list")
+    assert res.returncode == 0, res.stderr
+    assert "baseline" in res.stdout
+    assert "drift-then-spoof" in res.stdout
+
+
+def test_detect_fleet_mixed_smoke():
+    res = _run("detect_fleet.py", "--mixed", "--smoke")
+    assert res.returncode == 0, res.stderr
+    assert "per-group verdicts" in res.stdout
+    assert "serve stats" in res.stdout
+
+
+@pytest.mark.parametrize("detector,quant", [("mlp", "SINT"),
+                                            ("ae", "REAL")])
+def test_export_st_smoke(tmp_path, detector, quant):
+    res = _run("export_st.py", "--smoke", "--detector", detector,
+               "--quant", quant, "--out-dir", str(tmp_path))
+    assert res.returncode == 0, res.stderr
+    assert "OK: exported ST serves identically" in res.stdout
+    st_file = tmp_path / f"{detector}_{quant.lower()}.st"
+    assert st_file.exists()
+    text = st_file.read_text()
+    assert text.startswith("FUNCTION_BLOCK")
+    assert text.rstrip().endswith("END_FUNCTION_BLOCK")
+
+
+def test_export_st_smoke_reports_contract():
+    res = _run("export_st.py", "--smoke", "--detector", "ae", "--quant",
+               "SINT", "--out-dir", "/tmp/st-smoke-out")
+    assert res.returncode == 0, res.stderr
+    assert "bit-exact (SINT) contract" in res.stdout
+    assert "verdict parity   : 108/108" in res.stdout

@@ -1,0 +1,488 @@
+"""The Structured Text export backend, held to its bit-exactness contract.
+
+Four layers of evidence that an emitted FUNCTION_BLOCK decides exactly what
+the serving engine decides:
+
+* IEC 61131-3 semantics unit tests — the emulator implements the PLC's
+  arithmetic (two's-complement wrap, truncating division, dividend-sign MOD,
+  half-to-even REAL->int rounding, strict typing, runtime traps), because
+  bit-exactness claims are only as strong as the emulator's fidelity.
+* Differential fuzz — random all-Dense stacks x REAL/SINT x random inputs,
+  emulated output vs. the per-layer JAX oracle (``ref.fused_mlp_ref``):
+  bit-equal under SINT, scaled-epsilon under REAL (XLA reassociates dots).
+* Golden files — the canonical classifier and autoencoder exports are
+  pinned byte-for-byte (modulo whitespace) under ``tests/golden/``;
+  regenerate deliberately with ``pytest --update-golden``.
+* End-to-end scenario replay — exported detectors replay attack scenarios
+  through the emulator while a ``StreamEngine`` serves the same raw
+  readings, and every per-window verdict must agree (ring-wraparound-length
+  runs, composed attacks included).
+"""
+
+import importlib.util
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+from _hyp import given, settings, st  # noqa: E402
+
+from repro.codegen import (STError, STExportError, STFunctionBlock,
+                           STRuntimeError, STTypeError, export_st,
+                           format_real, numpy_mlp_ref,
+                           sequential_f32_mse, stream_windows,
+                           window_starts)
+from repro.configs import msf_detector as spec
+from repro.core import quantize
+from repro.core.layers import Dense, Flatten
+from repro.core.model import sequential
+from repro.kernels import ops, ref
+from repro.sim.detector import build_autoencoder, build_detector, \
+    recalibrate_threshold
+from repro.sim.heads import (ClassifierHead, ForecastHead, MarginHead,
+                             ReconstructionHead)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _load_example(name):
+    path = os.path.join(os.path.dirname(__file__), "..", "examples", name)
+    mod_spec = importlib.util.spec_from_file_location(
+        name.replace(".py", "_example"), path)
+    mod = importlib.util.module_from_spec(mod_spec)
+    mod_spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# Emulator: IEC 61131-3 semantics
+
+
+def _fb(decls, body, name="T"):
+    return STFunctionBlock(
+        f"FUNCTION_BLOCK {name}\n{decls}\n{body}\nEND_FUNCTION_BLOCK\n")
+
+
+def test_sint_twos_complement_wrap():
+    fb = _fb("VAR_INPUT A : SINT; END_VAR\nVAR_OUTPUT B : SINT; END_VAR",
+             "B := A + 1;")
+    out = fb.call({"A": np.array([126, 127, -128], np.int8)})
+    assert out["B"].dtype == np.int8
+    assert list(out["B"]) == [127, -128, -127]
+
+
+def test_integer_division_truncates_and_mod_takes_dividend_sign():
+    fb = _fb("VAR_INPUT A : DINT; B : DINT; END_VAR\n"
+             "VAR_OUTPUT Q : DINT; R : DINT; END_VAR",
+             "Q := A / B;\nR := A MOD B;")
+    out = fb.call({"A": np.array([-7, 7, -7], np.int32),
+                   "B": np.array([2, -2, 3], np.int32)})
+    assert list(out["Q"]) == [-3, -3, -2]
+    assert list(out["R"]) == [-1, 1, -1]
+
+
+def test_real_to_int_rounds_half_to_even():
+    fb = _fb("VAR_INPUT R : REAL; END_VAR\nVAR_OUTPUT S : SINT; END_VAR",
+             "S := REAL_TO_SINT(R);")
+    out = fb.call({"R": np.array([0.5, 1.5, 2.5, -0.5, -1.5], np.float32)})
+    assert list(out["S"]) == [0, 2, 2, 0, -2]
+
+
+def test_for_loop_negative_step():
+    fb = _fb("VAR_OUTPUT S : DINT; END_VAR\nVAR I : DINT; END_VAR",
+             "S := 0;\nFOR I := 9 TO 1 BY -2 DO\nS := S + I;\nEND_FOR;")
+    assert int(fb.call({})["S"][0]) == 9 + 7 + 5 + 3 + 1
+
+
+def test_if_with_batch_divergent_condition():
+    fb = _fb("VAR_INPUT X : REAL; END_VAR\nVAR_OUTPUT Y : REAL; END_VAR",
+             "IF X > 0.0 THEN\nY := 1.0;\nELSIF X < -1.0 THEN\n"
+             "Y := -2.0;\nELSE\nY := -1.0;\nEND_IF;")
+    out = fb.call({"X": np.array([3.0, -0.5, -4.0], np.float32)})
+    assert list(out["Y"]) == [1.0, -1.0, -2.0]
+
+
+def test_guarded_branch_suppresses_trap_on_inactive_lanes():
+    # The zero-divisor lane never executes the division; only active lanes
+    # may trap.
+    fb = _fb("VAR_INPUT A : DINT; B : DINT; END_VAR\n"
+             "VAR_OUTPUT Q : DINT; END_VAR",
+             "IF B <> 0 THEN\nQ := A / B;\nELSE\nQ := 0;\nEND_IF;")
+    out = fb.call({"A": np.array([8, 8], np.int32),
+                   "B": np.array([2, 0], np.int32)})
+    assert list(out["Q"]) == [4, 0]
+
+
+def test_fb_state_persists_across_calls_and_reset():
+    fb = _fb("VAR_OUTPUT N : DINT; END_VAR\nVAR C : DINT; END_VAR",
+             "C := C + 1;\nN := C;")
+    assert int(fb.call({})["N"][0]) == 1
+    assert int(fb.call({})["N"][0]) == 2
+    fb.reset()
+    assert int(fb.call({})["N"][0]) == 1
+
+
+def test_var_constant_is_write_protected():
+    with pytest.raises(STError):
+        _fb("VAR CONSTANT K : REAL := 1.0; END_VAR\n"
+            "VAR_OUTPUT Y : REAL; END_VAR",
+            "K := 2.0;\nY := K;")
+
+
+def test_strict_typing_rejects_mixed_arithmetic():
+    with pytest.raises(STTypeError):
+        _fb("VAR_INPUT X : REAL; END_VAR\nVAR_OUTPUT Y : REAL; END_VAR\n"
+            "VAR I : DINT; END_VAR",
+            "I := 1;\nY := X + I;")
+
+
+def test_real_to_sint_traps_out_of_range():
+    fb = _fb("VAR_INPUT R : REAL; END_VAR\nVAR_OUTPUT S : SINT; END_VAR",
+             "S := REAL_TO_SINT(R);")
+    with pytest.raises(STRuntimeError):
+        fb.call({"R": np.array([200.0], np.float32)})
+
+
+def test_division_by_zero_traps():
+    fb = _fb("VAR_INPUT B : DINT; END_VAR\nVAR_OUTPUT Q : DINT; END_VAR",
+             "Q := 8 / B;")
+    with pytest.raises(STRuntimeError):
+        fb.call({"B": np.array([0], np.int32)})
+
+
+def test_batch_varying_array_index_traps():
+    fb = _fb("VAR_INPUT N : DINT; END_VAR\nVAR_OUTPUT Y : REAL; END_VAR\n"
+             "VAR A : ARRAY[0..3] OF REAL; END_VAR",
+             "Y := A[N];")
+    with pytest.raises(STRuntimeError):
+        fb.call({"N": np.array([0, 2], np.int32)})
+
+
+def test_out_of_range_array_index_traps():
+    with pytest.raises(STError):
+        fb = _fb("VAR_OUTPUT Y : REAL; END_VAR\n"
+                 "VAR A : ARRAY[0..3] OF REAL; END_VAR",
+                 "Y := A[5];")
+        fb.call({})
+
+
+def test_out_of_range_int_literal_rejected():
+    with pytest.raises(STError):
+        fb = _fb("VAR_OUTPUT S : SINT; END_VAR", "S := 300;")
+        fb.call({})
+
+
+def test_format_real_round_trips_f32():
+    for v in [0.0, 1.0, -1.5, 0.1, 3.14159265, 1e-8, 2.5e10, -7.03e-4]:
+        s = format_real(v)
+        assert "." in s or "E" in s
+        assert np.float32(float(s)) == np.float32(v)
+
+
+# ---------------------------------------------------------------------------
+# Window schedule / score oracle helpers
+
+
+def test_window_starts_matches_serving_schedule():
+    assert window_starts(30, 10, 5) == [9, 14, 19, 24, 29]
+    assert window_starts(8, 10, 5) == []
+
+
+def test_stream_windows_layout():
+    readings = np.arange(24, dtype=np.float32).reshape(12, 2)
+    wins = stream_windows(readings, window=4, stride=3)
+    assert wins.shape == (3, 8)
+    # Oldest reading first, features interleaved per reading.
+    assert list(wins[0]) == list(np.arange(8.0))
+    assert list(wins[1]) == list(np.arange(6.0, 14.0))
+    assert list(wins[2]) == list(np.arange(12.0, 20.0))
+
+
+def test_sequential_f32_mse_is_order_sensitive_oracle():
+    rng = np.random.default_rng(3)
+    y = rng.standard_normal((5, 400)).astype(np.float32)
+    t = rng.standard_normal((5, 400)).astype(np.float32)
+    seq = sequential_f32_mse(y, t)
+    vec = np.mean(np.square(y - t), axis=-1)
+    assert np.allclose(seq, vec, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Differential fuzz: random stacks vs. the JAX oracle
+
+
+def _random_stack(widths, seed, scheme, acts_pool):
+    rng = np.random.default_rng(seed)
+    in_width = int(rng.integers(1, 13))
+    acts = [str(rng.choice(acts_pool)) for _ in widths]
+    model = sequential([Dense(units=w, activation=a)
+                        for w, a in zip(widths, acts)], (in_width,))
+    params = model.init_params(jax.random.PRNGKey(seed))
+    # Non-zero biases and wider weights so quantization rails get exercised.
+    params = jax.tree_util.tree_map(
+        lambda p: p + 0.1 * jnp.asarray(
+            np.random.default_rng(seed + 1).standard_normal(p.shape),
+            jnp.float32), params)
+    x = rng.standard_normal((5, in_width)).astype(np.float32) * 2.0
+    if scheme == "SINT":
+        params = quantize.quantize_params(
+            model, params, "SINT",
+            calibration=quantize.calibration_samples(x, k=4))
+    return model, params, x
+
+
+def _oracle(model, params, x):
+    # EAGER per-layer reference: dispatched op by op, so the requantize
+    # mul+add stays two separately-rounded f32 ops.  (Jitting it lets XLA
+    # FMA-contract the pair once biases are nonzero — not a bit-oracle.)
+    stack = ops.dense_stack(model, params)
+    out = np.asarray(ref.fused_mlp_ref(jnp.asarray(x), stack))
+    if any("qw" in p for p, _ in stack):
+        # The pure-numpy §6.1 oracle must agree bit-for-bit with the eager
+        # JAX reference — the tie between the two oracle formulations.
+        assert np.array_equal(out, numpy_mlp_ref(x, stack))
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(widths=st.lists(st.integers(1, 12), min_size=1, max_size=4),
+       seed=st.integers(0, 10_000))
+def test_fuzz_sint_export_bit_matches_oracle(widths, seed):
+    model, params, x = _random_stack(widths, seed, "SINT",
+                                     ("relu", "linear"))
+    export = export_st(model, params, n_features=1, name="FUZZ")
+    out = STFunctionBlock(export.text).call({"X": x})
+    oracle = _oracle(model, params, x)
+    assert out["Y"].astype(np.float32).shape == oracle.shape
+    assert np.array_equal(out["Y"].astype(np.float32), oracle)
+
+
+@settings(max_examples=25, deadline=None)
+@given(widths=st.lists(st.integers(1, 12), min_size=1, max_size=4),
+       seed=st.integers(0, 10_000))
+def test_fuzz_real_export_epsilon_matches_oracle(widths, seed):
+    model, params, x = _random_stack(widths, seed, "REAL",
+                                     ("relu", "linear", "sigmoid", "tanh"))
+    export = export_st(model, params, n_features=1, name="FUZZ")
+    out = STFunctionBlock(export.text).call({"X": x})
+    oracle = _oracle(model, params, x)
+    diff = np.abs(out["Y"].astype(np.float32) - oracle)
+    assert diff.max() <= 1e-5 * (1.0 + np.abs(oracle).max())
+
+
+def test_fuzz_sint_matches_fused_per_layer_parity():
+    # One deep stack, checked against BOTH oracles: bit-exact vs. the
+    # per-layer reference (the emitted arithmetic's contract), and to within
+    # an ulp of the fused forward — the padded fused XLA program may contract
+    # its requantize mul+add into an FMA, so two *JAX* programs already
+    # differ in the last bit there; the ST side pins the per-layer form.
+    model, params, x = _random_stack([12, 8, 8, 4], 42, "SINT",
+                                     ("relu", "linear"))
+    export = export_st(model, params, n_features=1, name="FUZZ")
+    out = STFunctionBlock(export.text).call({"X": x})["Y"].astype(np.float32)
+    oracle = _oracle(model, params, x)
+    assert np.array_equal(out, oracle)
+    stack = ops.dense_stack(model, params)
+    fused = np.asarray(ops.fused_forward(jnp.asarray(x), stack,
+                                         backend="jax"))
+    assert np.abs(out - fused).max() <= 1e-6 * (1.0 + np.abs(fused).max())
+
+
+# ---------------------------------------------------------------------------
+# Export validation errors
+
+
+def test_export_rejects_non_dense_graph():
+    model = sequential([Flatten(), Dense(units=2)], (4,))
+    params = model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(STExportError):
+        export_st(model, params, n_features=1)
+
+
+def test_export_rejects_unsupported_activation():
+    model = sequential([Dense(units=2, activation="softmax")], (4,))
+    params = model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(STExportError):
+        export_st(model, params, n_features=1)
+
+
+@pytest.mark.parametrize("scheme", ["INT", "DINT"])
+def test_export_rejects_f32_emulated_int_schemes(scheme):
+    # INT/DINT quantization accumulates in f32 on the JAX side — there is no
+    # PLC arithmetic that reproduces it bit-exactly, so the exporter refuses.
+    model = sequential([Dense(units=3, activation="relu")], (4,))
+    params = model.init_params(jax.random.PRNGKey(0))
+    qparams = quantize.quantize_params(model, params, scheme)
+    with pytest.raises(STExportError):
+        export_st(model, qparams, n_features=1)
+
+
+def test_export_rejects_uncalibrated_score_head():
+    model = sequential([Dense(units=4, activation="linear")], (4,))
+    params = model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="threshold"):
+        export_st(model, params, head=ReconstructionHead(), n_features=1)
+
+
+def test_export_rejects_ragged_input_for_feature_count():
+    model = sequential([Dense(units=2)], (5,))
+    params = model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(STExportError):
+        export_st(model, params, n_features=2)
+
+
+# ---------------------------------------------------------------------------
+# Head epilogues: margin + forecast (classifier/reconstruction are covered
+# end-to-end below)
+
+
+def test_margin_head_epilogue():
+    rng = np.random.default_rng(11)
+    model = sequential([Dense(units=6, activation="relu"),
+                        Dense(units=4, activation="linear")], (8,))
+    params = model.init_params(jax.random.PRNGKey(5))
+    x = rng.standard_normal((9, 8)).astype(np.float32)
+    center = tuple(float(c) for c in rng.standard_normal(4))
+    y = _oracle(model, params, x)
+    scores = np.mean(np.square(y - np.asarray(center, np.float32)), axis=-1)
+    mid = np.sort(scores)[len(scores) // 2 - 1:len(scores) // 2 + 1]
+    head = MarginHead(center=center, threshold=float(mid.mean()))
+    export = export_st(model, params, head=head, n_features=1,
+                       name="MARGIN")
+    out = STFunctionBlock(export.text).call({"X": x})
+    assert np.allclose(out["SCORE"], scores, rtol=1e-4)
+    thr = np.float32(head.threshold)
+    assert np.all(out["THRESHOLD"].astype(np.float32) == thr)
+    assert np.array_equal(out["PRED"],
+                          (out["SCORE"].astype(np.float32) > thr)
+                          .astype(out["PRED"].dtype))
+    assert 0 < int(out["PRED"].sum()) < len(scores)
+
+
+def test_forecast_head_epilogue_ring_asymmetry():
+    # The model eats W-1 readings; the block's window carries one more (the
+    # forecast target) and scores against it.
+    rng = np.random.default_rng(12)
+    model = sequential([Dense(units=6, activation="relu"),
+                        Dense(units=2, activation="linear")], (8,))
+    params = model.init_params(jax.random.PRNGKey(6))
+    head = ForecastHead(threshold=0.5)
+    export = export_st(model, params, head=head, n_features=2,
+                       name="FORECAST")
+    assert export.window == 5 and export.window_width == 10
+    x = rng.standard_normal((7, 10)).astype(np.float32)
+    out = STFunctionBlock(export.text).call({"X": x})
+    y = _oracle(model, params, x[:, :8])
+    scores = np.mean(np.square(y - x[:, 8:]), axis=-1)
+    assert np.allclose(out["SCORE"], scores, rtol=1e-4)
+    assert np.array_equal(
+        out["PRED"], (out["SCORE"].astype(np.float32)
+                      > np.float32(0.5)).astype(out["PRED"].dtype))
+
+
+# ---------------------------------------------------------------------------
+# Golden files: the canonical exports, pinned
+
+
+def _canonical_calibration():
+    rng = np.random.default_rng(2026)
+    return rng.standard_normal((64, spec.INPUT_SIZE)).astype(np.float32)
+
+
+def _golden_export(kind):
+    wins = _canonical_calibration()
+    if kind == "classifier":
+        model = build_detector()
+        params = model.init_params(jax.random.PRNGKey(0))
+        params = quantize.quantize_params(
+            model, params, "SINT",
+            calibration=quantize.calibration_samples(wins, k=16))
+        head = ClassifierHead()
+    else:
+        model = build_autoencoder()
+        params = model.init_params(jax.random.PRNGKey(1))
+        params = quantize.quantize_params(
+            model, params, "SINT",
+            calibration=quantize.calibration_samples(wins, k=16))
+        head, _ = recalibrate_threshold(model, params, wins)
+    return export_st(model, params, head=head,
+                     name=f"GOLDEN_{kind.upper()}",
+                     normalize=(spec.NORM_MEAN, spec.NORM_STD))
+
+
+@pytest.mark.parametrize("kind,fname", [
+    ("classifier", "classifier_sint.st"),
+    ("autoencoder", "autoencoder_sint.st"),
+])
+def test_golden_st_export(kind, fname, update_golden):
+    export = _golden_export(kind)
+    path = os.path.join(GOLDEN_DIR, fname)
+    if update_golden:
+        with open(path, "w") as f:
+            f.write(export.text)
+        pytest.skip(f"rewrote {fname}")
+    assert os.path.exists(path), \
+        f"missing golden {fname}; generate with pytest --update-golden"
+    with open(path) as f:
+        golden = f.read()
+    # Whitespace-normalized: token stream must be identical.
+    assert export.text.split() == golden.split(), (
+        f"emitted ST for the canonical {kind} drifted from {fname}; if the "
+        "change is intentional, regenerate with pytest --update-golden")
+
+
+def test_export_is_deterministic():
+    a = _golden_export("classifier")
+    b = _golden_export("classifier")
+    assert a.text == b.text
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: exported detectors replay attack scenarios, verdict parity
+# with the StreamEngine over ring-wraparound-length runs
+
+
+SCENARIO_NAMES = ["baseline", "tb0-spoof", "drift-then-spoof", "steam-pulse"]
+E2E_CYCLES = 460  # window 200 + stride 10 ring wraps more than twice
+
+
+@pytest.fixture(scope="module")
+def e2e():
+    from repro.sim.scenarios import fleet_readings
+    mod = _load_example("export_st.py")
+    raw = fleet_readings(len(SCENARIO_NAMES), E2E_CYCLES,
+                         names=SCENARIO_NAMES, seed=7)
+    calib = mod.calibration_windows(len(SCENARIO_NAMES), E2E_CYCLES, 7,
+                                    spec.STRIDE)
+    return mod, raw, calib
+
+
+@pytest.mark.parametrize("kind", ["mlp", "ae"])
+def test_e2e_scenario_verdict_parity_sint(kind, e2e):
+    mod, raw, calib = e2e
+    model, params, head = mod.smoke_detector(kind, "SINT", calib)
+    export = export_st(model, params, head=head,
+                       name=f"E2E_{kind.upper()}",
+                       normalize=(spec.NORM_MEAN, spec.NORM_STD))
+    res = mod.verify_export(export, model, params, head, raw, spec.STRIDE)
+    n_wins = len(SCENARIO_NAMES) * len(
+        window_starts(E2E_CYCLES, spec.WINDOW, spec.STRIDE))
+    assert res["windows"] == n_wins
+    assert res["failures"] == 0
+    assert res["borderline"] == 0
+    assert res["max_body_diff"] == 0.0          # bit-exact model outputs
+    # Verdict diversity: the attacks fire, the fleet is not saturated.
+    assert 0 < res["anomalous"] < res["windows"]
+
+
+def test_e2e_scenario_verdict_parity_real_ae(e2e):
+    mod, raw, calib = e2e
+    model, params, head = mod.smoke_detector("ae", "REAL", calib)
+    export = export_st(model, params, head=head, name="E2E_AE_REAL",
+                       normalize=(spec.NORM_MEAN, spec.NORM_STD))
+    res = mod.verify_export(export, model, params, head, raw, spec.STRIDE)
+    assert res["failures"] == 0
