@@ -26,8 +26,18 @@ score reduction, so sharded hosts gather one float per stream.
 model-group question — the fleet split four ways across
 classifier/autoencoder/margin/forecast groups served by ONE
 ``GroupedStreamEngine`` (a single jitted step, one fused dispatch per
-group) vs one ``StreamEngine`` per model; ``vs_split`` is the paired-pass
+group — ``megakernel=False`` pins that flavor so the row keeps measuring
+it) vs one ``StreamEngine`` per model; ``vs_split`` is the paired-pass
 grouped speedup.
+
+**Megakernel rows** (``detect_grouped_*_mega``): the same four-group fleet
+served by the single-dispatch grouped megakernel (ONE ``pallas_call`` per
+verdict step for the whole fleet — packed weight arena, per-group scales
+and in-kernel head epilogues) vs the per-group flavor above, interleaved
+paired passes; ``vs_pergroup`` is the paired-median megakernel speedup and
+``p99_pergroup_ms`` the comparator's tail from the same pairing.  Dispatch
+accounting (1 per mega step vs one per group) is asserted inside the pair
+runner, not assumed.
 
 **Sustained-throughput rows** (``detect_sustained_*``): the async
 double-buffered pipeline (``async_depth=1``) vs the synchronous engine
@@ -187,6 +197,12 @@ def run_sustained_pair(model, params, readings, *, stride: int,
                                float(np.percentile(lats, 99)) if lats
                                else 0.0)
         ratios.append(walls[0] / walls[1])   # = wps_async / wps_sync
+    # Both flavors run the fused single-model step: one logical dispatch
+    # per verdict step, asserted so the row can't silently degrade to the
+    # per-layer path.
+    for eng in engines.values():
+        assert eng.stats.dispatches == eng.stats.steps, \
+            (eng.stats.dispatches, eng.stats.steps)
     best["ratio"] = float(np.median(ratios))
     return best
 
@@ -273,15 +289,17 @@ def run_grouped_pair(detectors, readings, *, stride: int,
 
     The deployment question: a fleet whose streams carry different models
     can be served by one :class:`GroupedStreamEngine` (one jitted step, one
-    fused dispatch per group) or by one :class:`StreamEngine` per model
-    (one jitted step EACH, host python between them).  Returns
+    fused dispatch per group — pinned with ``megakernel=False`` so this row
+    keeps measuring the per-group flavor now that packable fleets default
+    to the megakernel) or by one :class:`StreamEngine` per model (one
+    jitted step EACH, host python between them).  Returns
     {"grouped": (windows, wall_s, p99_s), "split": ..., "ratio": r} with
     ``ratio`` = median paired split-wall / grouped-wall (grouped speedup)."""
     n_cycles, n_streams, _ = readings.shape
     n_per = n_streams // len(detectors)
     groups = [ModelGroup(name, m, p, n_per, head)
               for name, m, p, head in detectors]
-    ge = GroupedStreamEngine(groups, stride=stride)
+    ge = GroupedStreamEngine(groups, stride=stride, megakernel=False)
     ge.warmup()
     splits = [(i * n_per, StreamEngine(m, p, n_streams=n_per, stride=stride,
                                        head=head))
@@ -325,6 +343,64 @@ def run_grouped_pair(detectors, readings, *, stride: int,
                 best[kind] = (windows, wall,
                               float(np.percentile(lats, 99)) if lats else 0.0)
         ratios.append(walls["split"] / walls["grouped"])
+    best["ratio"] = float(np.median(ratios))
+    return best
+
+
+def run_mega_pair(detectors, readings, *, stride: int,
+                  reps: int = 12) -> dict:
+    """Single-dispatch megakernel vs the per-group grouped step over the
+    identical heterogeneous fleet, interleaved-pass discipline
+    (run_engine_pair conventions).
+
+    Both engines serve the same four-group fleet through ONE jitted step;
+    the per-group flavor carries one fused pallas dispatch per group, the
+    megakernel exactly ONE for the whole fleet (grid ``(group, M-blocks)``,
+    packed weight arena, per-group quantization scales and head epilogues
+    in-kernel).  Returns {"mega": (windows, wall_s, p99_s),
+    "pergroup": ..., "ratio": r} with ``ratio`` = median paired
+    pergroup-wall / mega-wall (megakernel speedup)."""
+    n_cycles, n_streams, _ = readings.shape
+    n_per = n_streams // len(detectors)
+    engines = {}
+    for mega in (False, True):
+        groups = [ModelGroup(name, m, p, n_per, head)
+                  for name, m, p, head in detectors]
+        ge = GroupedStreamEngine(groups, stride=stride, shard=False,
+                                 megakernel=mega)
+        assert ge._mega == mega, ge._mega_reason
+        ge.warmup()
+        for c in range(min(spec.WINDOW, n_cycles)):   # ring fill, uncounted
+            ge.ingest(readings[c % n_cycles])
+        engines[mega] = ge
+    best = {"mega": None, "pergroup": None}
+    ratios = []
+    for rep in range(reps):
+        order = (False, True) if rep % 2 == 0 else (True, False)
+        walls = {}
+        for mega in order:
+            kind = "mega" if mega else "pergroup"
+            ge = engines[mega]
+            w0 = ge.stats.windows
+            ge.stats.reset_latencies()   # per-pass reservoir swap
+            t0 = time.perf_counter()
+            for c in range(n_cycles):
+                ge.ingest(readings[c])
+            wall = time.perf_counter() - t0
+            windows = ge.stats.windows - w0
+            walls[mega] = wall
+            lats = list(ge.stats.latencies_s)
+            if best[kind] is None or wall / max(windows, 1) < \
+                    best[kind][1] / max(best[kind][0], 1):
+                best[kind] = (windows, wall,
+                              float(np.percentile(lats, 99)) if lats else 0.0)
+        ratios.append(walls[False] / walls[True])
+    # The collapsed dispatch count the rows claim, asserted: one logical
+    # dispatch per megakernel step, one per group for the per-group flavor.
+    for mega, ge in engines.items():
+        want = ge.stats.steps * (1 if mega else len(detectors))
+        assert ge.stats.dispatches == want, \
+            (mega, ge.stats.dispatches, want)
     best["ratio"] = float(np.median(ratios))
     return best
 
@@ -603,6 +679,21 @@ def main(quick: bool = False, n_streams: int = 16, n_cycles: int = 0):
         print(f"# grouped {scheme}: {wps['grouped']:.0f} vs split "
               f"{wps['split']:.0f} windows/s "
               f"(paired ratio {pair['ratio']:.2f}x)")
+        # Megakernel row (detect_grouped_*_mega): the same fleet, ONE
+        # pallas dispatch per verdict step vs one per group.
+        mpair = run_mega_pair(detectors, readings, stride=stride)
+        w, wall, p99 = mpair["mega"]
+        wps_mega = w / wall
+        p99_pg = mpair["pergroup"][2]
+        rows.append({
+            "name": f"detect_grouped_{scheme.lower()}_mega",
+            "us_per_call": wall / max(w, 1) * 1e6,
+            "derived": f"windows_s={wps_mega:.0f};p99_ms={p99 * 1e3:.2f};"
+                       f"groups=4;vs_pergroup={mpair['ratio']:.2f}x;"
+                       f"p99_pergroup_ms={p99_pg * 1e3:.2f}"})
+        print(f"# megakernel {scheme}: {wps_mega:.0f} windows/s, "
+              f"vs per-group paired ratio {mpair['ratio']:.2f}x "
+              f"(p99 {p99 * 1e3:.2f}ms vs {p99_pg * 1e3:.2f}ms)")
 
     # Drift-adaptation rows (detect_drift_*): the autoencoder engine over a
     # *drifting* fleet (seasonal-drift scenario — benign flash-gain decay

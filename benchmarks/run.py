@@ -8,6 +8,14 @@ Modules that return their rows also get a machine-readable perf record
 for the fleet-detection fused-vs-per-layer comparison, with the serving bench
 record alongside) — CI uploads these as artifacts so perf history is diffable
 per commit.
+
+``--compare OLD.json`` diffs this run's rows against a baseline record:
+every row present in both is printed with its old→new ``us_per_call``
+ratio, and any row more than 20% slower than the baseline makes the run
+exit nonzero.  With ``--compare-to NEW.json`` no modules run at all — the
+two records are diffed directly (the CI wiring: the bench-artifacts job
+diffs its fresh ``--quick`` artifact against the committed baseline as a
+non-blocking step, so a regression flags the PR without failing it).
 """
 
 import argparse
@@ -51,6 +59,46 @@ def write_bench_json(out_dir: str, module: str, ref: str, quick: bool,
     return path
 
 
+REGRESSION_THRESHOLD = 0.20
+
+
+def load_rows(path: str) -> list:
+    with open(path) as f:
+        record = json.load(f)
+    return record["rows"] if isinstance(record, dict) else record
+
+
+def compare_rows(old_rows, new_rows, *,
+                 threshold: float = REGRESSION_THRESHOLD) -> int:
+    """Print per-row old→new ``us_per_call`` ratios; return how many rows
+    regressed by more than ``threshold``.
+
+    Rows are matched by name: rows only in the new run are reported as new
+    (a --quick run vs a full baseline legitimately differs in row sets),
+    baseline rows the new run lacks are listed but never counted as
+    regressions — only a matched row that got slower fails the gate."""
+    old = {r["name"]: r for r in old_rows}
+    new_names = {r["name"] for r in new_rows}
+    regressed = 0
+    for r in new_rows:
+        o = old.get(r["name"])
+        if o is None:
+            print(f"# compare {r['name']}: no baseline row")
+            continue
+        if not o.get("us_per_call") or not r.get("us_per_call"):
+            continue
+        ratio = r["us_per_call"] / o["us_per_call"]
+        tag = "REGRESSION" if ratio > 1.0 + threshold else "ok"
+        print(f"# compare {r['name']}: {o['us_per_call']:.1f} -> "
+              f"{r['us_per_call']:.1f} us/call ({ratio:.2f}x) {tag}")
+        regressed += ratio > 1.0 + threshold
+    missing = sorted(n for n in old if n not in new_names)
+    if missing:
+        print(f"# compare: {len(missing)} baseline rows not in this run: "
+              + ",".join(missing))
+    return regressed
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -58,10 +106,28 @@ def main() -> None:
                     help="comma-separated module names")
     ap.add_argument("--out-dir", default=".",
                     help="directory for BENCH_<name>.json perf records")
+    ap.add_argument("--compare", default=None, metavar="OLD.json",
+                    help="baseline perf record; this run's matching rows "
+                         f"more than {REGRESSION_THRESHOLD:.0%} slower "
+                         "exit nonzero")
+    ap.add_argument("--compare-to", default=None, metavar="NEW.json",
+                    help="with --compare: diff two records directly, "
+                         "running no benchmark modules")
     args = ap.parse_args()
+
+    if args.compare_to:
+        if not args.compare:
+            sys.exit("--compare-to needs --compare OLD.json")
+        regressed = compare_rows(load_rows(args.compare),
+                                 load_rows(args.compare_to))
+        if regressed:
+            sys.exit(f"{regressed} rows regressed more than "
+                     f"{REGRESSION_THRESHOLD:.0%} vs {args.compare}")
+        return
 
     only = set(args.only.split(",")) if args.only else None
     failures = 0
+    all_rows = []
     for name, ref in MODULES:
         if only and name not in only:
             continue
@@ -76,9 +142,15 @@ def main() -> None:
             continue
         if isinstance(rows, list) and rows and isinstance(rows[0], dict):
             path = write_bench_json(args.out_dir, name, ref, args.quick, rows)
+            all_rows.extend(rows)
             print(f"# wrote {path}", flush=True)
     if failures:
         sys.exit(f"{failures} benchmark modules failed")
+    if args.compare:
+        regressed = compare_rows(load_rows(args.compare), all_rows)
+        if regressed:
+            sys.exit(f"{regressed} rows regressed more than "
+                     f"{REGRESSION_THRESHOLD:.0%} vs {args.compare}")
 
 
 if __name__ == "__main__":

@@ -61,8 +61,19 @@ from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 # Softmax normalizes across the (padded) lane axis, so it cannot run on
 # zero-padded tiles without masking; every other §4.1 activation is
 # element-wise and pad-safe (garbage lanes are killed by the next layer's
-# zero-padded weight rows).
+# zero-padded weight rows).  The *grouped* megakernel additionally supports a
+# FINAL-layer softmax by masking against the group's true output width in
+# SMEM (the one place a softmax head can fuse).
 FUSED_ACTIVATIONS = frozenset(ACTIVATIONS) - {"softmax"}
+
+# Stable activation-id table for the grouped kernel's SMEM act selector
+# (softmax included: it is legal at the final position, where the kernel
+# masks pad lanes against the group's true output width).
+GROUPED_ACT_IDS = {name: i for i, name in enumerate(sorted(ACTIVATIONS))}
+
+# Grouped-payload kinds: what the in-kernel epilogue writes per group.
+GROUPED_KIND_LOGITS = 0     # classifier: the final activations themselves
+GROUPED_KIND_SCORE = 1      # score head: mean squared error vs the target
 
 # VMEM is ~16 MB/core; the *resident set* — one K-slab of the first layer,
 # every later layer in full, one activation tile per layer, the split-K
@@ -318,6 +329,239 @@ def fused_mlp(
         scratch_shapes=[pltpu.VMEM((block_m, n1), acc_dtype)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Grouped megakernel: a whole heterogeneous fleet in ONE dispatch
+# ---------------------------------------------------------------------------
+#
+# The grouped-GEMM / MoE-expert-batching idea applied to the detector zoo:
+# every group's (padded) weight/bias/scale slabs for layer position l live in
+# one (G, K_l, N_l) arena, the grid spans (group, M-blocks), and per-group
+# geometry is resolved by index maps plus a small SMEM scalar table — kind,
+# true output width, activation id and skip flag per position.  Groups
+# shallower than the deepest stack "skip" their trailing positions: the SMEM
+# flag passes activations through untouched, and the union width at those
+# positions is kept at least as wide as every finished group's true output so
+# nothing is truncated.  Pad lanes obey the same zero-row annihilation
+# contract as the single-stack kernel; a group's garbage lanes beyond its
+# true width are killed by ITS zero-padded next-layer rows because each group
+# reads only its own arena slice.
+#
+# The epilogue also runs in-kernel, per group: classifiers write their final
+# activations (with softmax masked to the true lane count — the one fused-
+# scope gap the single-stack kernel cannot close), score heads write
+# ``mean((h - tgt)^2)`` over true lanes into payload lane 0.
+
+
+class GroupedLayer(NamedTuple):
+    """One layer *position* of the packed fleet, arena layout.
+
+    ``w``: (G, K, N) weights — one dtype per position (f32/int8/int16/int32).
+    ``bias``: (G, 1, N) f32; ``scale``: (G, 1, N) f32 combined
+    x_scale * w_scale (zeros on real/skip slots); ``x_scale``: (G, 1) f32
+    activation scale (ones on real/skip slots — a 0 would round ``h/0`` into
+    NaNs even though the zero weight slab annihilates the product).
+    """
+
+    w: jax.Array
+    bias: jax.Array
+    scale: jax.Array
+    x_scale: jax.Array
+
+
+def grouped_vmem_bytes(pos_shapes: Sequence[tuple], *,
+                       block_m: int = 128, n_pay: int = 128) -> int:
+    """VMEM resident-set estimate for the grouped megakernel.
+
+    ``pos_shapes`` is ``[(K, N, itemsize), ...]`` — the *union* (widest-slab)
+    arena geometry per layer position, padded.  Each position charges two
+    arena slabs (the revolving group axis double-buffers the next group's
+    slab while the current one computes), scale+bias lanes, and an activation
+    tile; the x block, target block and payload block ride on top.  There is
+    no K grid — the whole union input width is resident — so the budget is
+    the honest whole-fleet bill.
+    """
+    total = block_m * pos_shapes[0][0] * 4            # x block
+    total += 2 * block_m * n_pay * 4                  # target + payload
+    for k, n, itemsize in pos_shapes:
+        total += 2 * (k * n * itemsize + 8 * n)       # double-buffered slabs
+        total += block_m * n * 4                      # activation tile
+    return total
+
+
+def _grouped_kernel(*refs, modes: Sequence[str], qmaxes: Sequence[int],
+                    pos_acts: Sequence[Sequence[str]], n_layers: int):
+    """One (group, M-block) grid step: the group's whole stack + epilogue.
+
+    Ref order: meta (SMEM), x, then per position (x_scale SMEM, w, scale,
+    bias), then tgt, out.  ``meta`` rows are
+    ``[kind, n_out_true, act_id * L, skip * L]``.
+    """
+    meta_ref, x_ref = refs[0], refs[1]
+    tgt_ref, out_ref = refs[-2], refs[-1]
+    kind = meta_ref[0, 0]
+    n_out = meta_ref[0, 1]
+    h = x_ref[0]
+    for l in range(n_layers):
+        xs_ref, w_ref, s_ref, b_ref = refs[2 + 4 * l: 6 + 4 * l]
+        w = w_ref[0]
+        if modes[l] == "real":
+            y = jax.lax.dot_general(
+                h, w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) + b_ref[0]
+        else:
+            hq = jnp.clip(jnp.round(h / xs_ref[0, 0]),
+                          -qmaxes[l], qmaxes[l])
+            if modes[l] == "int8":
+                acc = jax.lax.dot_general(
+                    hq.astype(jnp.int8), w, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32,
+                ).astype(jnp.float32)
+            else:
+                acc = jax.lax.dot_general(
+                    hq, w.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                )
+            y = acc * s_ref[0] + b_ref[0]
+        # Per-group activation: select among the distinct activations used at
+        # this position by the SMEM act id (statically unrolled — typically
+        # one).  Softmax is masked to the group's true output width.
+        act_id = meta_ref[0, 2 + l]
+        out_l = y
+        for name in pos_acts[l]:
+            if name == "softmax":
+                lanes = jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)
+                z = jnp.where(lanes < n_out, y, -jnp.inf)
+                zmax = jnp.max(z, axis=1, keepdims=True)
+                ez = jnp.exp(z - zmax)
+                a = ez / jnp.sum(ez, axis=1, keepdims=True)
+            else:
+                a = ACTIVATIONS[name](y)
+            if len(pos_acts[l]) == 1:
+                out_l = a
+            else:
+                out_l = jnp.where(act_id == GROUPED_ACT_IDS[name], a, out_l)
+        # Skip pass-through for groups shallower than this position: carry
+        # the previous activations (their true payload sits in the leading
+        # lanes; the union width never truncates it).
+        skip = meta_ref[0, 2 + n_layers + l]
+        n_l = out_l.shape[1]
+        prev = h
+        if prev.shape[1] < n_l:
+            prev = jnp.pad(prev, ((0, 0), (0, n_l - prev.shape[1])))
+        elif prev.shape[1] > n_l:
+            prev = prev[:, :n_l]
+        h = jnp.where(skip == 1, prev, out_l)
+    # In-kernel head epilogue: logits pass through, score heads reduce to a
+    # masked mean-squared-error against the (full-width) target block in
+    # payload lane 0.  The payload block is narrower than the target block —
+    # pad128(max payload width) vs the last position's union width.
+    n_pay = out_ref.shape[2]
+    tgt = tgt_ref[0]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+    d = jnp.where(lanes < n_out, h - tgt, 0.0)
+    score = jnp.sum(d * d, axis=1, keepdims=True) / n_out.astype(jnp.float32)
+    pay_score = jnp.where(lanes[:, :n_pay] == 0, score, 0.0)
+    out_ref[0] = jnp.where(kind == GROUPED_KIND_LOGITS,
+                           h[:, :n_pay], pay_score)
+
+
+def grouped_fused_mlp(
+    x: jax.Array,
+    layers: Sequence[GroupedLayer],
+    meta: jax.Array,
+    tgt: jax.Array,
+    *,
+    n_pay: int,
+    modes: Sequence[str],
+    qmaxes: Sequence[int],
+    pos_acts: Sequence[Sequence[str]],
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Run a whole heterogeneous fleet as ONE Pallas dispatch.
+
+    Args:
+      x: (G, M, K0) f32 — every group's (padded) input windows; M divisible
+        by ``block_m``, K0 and all arena dims padded to the 128-lane tile.
+      layers: :class:`GroupedLayer` arenas per position; position l's
+        ``w.shape[1]`` feeds position l+1's ``w.shape[2]``.
+      meta: (G, 2 + 2L) int32 SMEM table —
+        ``[kind, n_out_true, act_id x L, skip x L]`` per group.
+      tgt: (G, M, N_last) f32 epilogue targets at the last position's union
+        width (window / tail / center rows; zeros for classifiers).
+      n_pay: payload lane count (128-padded max over groups: a classifier's
+        true output width, 1 for score heads); at most ``N_last``.
+      modes/qmaxes/pos_acts: static per-position dtype mode, quantization
+        clip rail and the distinct activation names used at that position.
+
+    Returns (G, M, n_pay) f32 payloads: final activations for
+    ``GROUPED_KIND_LOGITS`` groups (softmax masked to true lanes), masked
+    MSE-vs-target in lane 0 for ``GROUPED_KIND_SCORE`` groups.
+    """
+    if not layers:
+        raise ValueError("grouped_fused_mlp needs at least one position")
+    g, m, k0 = x.shape
+    n_layers = len(layers)
+    assert m % block_m == 0, (m, block_m)
+    assert k0 % 128 == 0, x.shape
+    assert meta.shape == (g, 2 + 2 * n_layers), meta.shape
+    n_last = layers[-1].w.shape[2]
+    assert tgt.shape == (g, m, n_last), (tgt.shape, n_last)
+    assert n_pay % 128 == 0 and n_pay <= n_last, (n_pay, n_last)
+    prev_n = k0
+    shapes = []
+    for l, layer in enumerate(layers):
+        gw, k, n = layer.w.shape
+        assert gw == g and k == prev_n, (l, layer.w.shape, prev_n)
+        assert k % 128 == 0 and n % 128 == 0, layer.w.shape
+        assert layer.bias.shape == (g, 1, n), layer.bias.shape
+        assert layer.scale.shape == (g, 1, n), layer.scale.shape
+        assert layer.x_scale.shape == (g, 1), layer.x_scale.shape
+        shapes.append((k, n, layer.w.dtype.itemsize))
+        prev_n = n
+    vmem = grouped_vmem_bytes(shapes, block_m=block_m, n_pay=n_pay)
+    if vmem > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"grouped arena needs ~{vmem} B of VMEM resident (> "
+            f"{VMEM_BUDGET_BYTES}); fall back to per-group dispatch")
+
+    meta_cols = meta.shape[1]
+    operands = [meta, x]
+    in_specs = [
+        pl.BlockSpec((1, meta_cols), lambda gi, i: (gi, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, block_m, k0), lambda gi, i: (gi, i, 0)),
+    ]
+    for layer in layers:
+        _, k, n = layer.w.shape
+        operands += [layer.x_scale, layer.w, layer.scale, layer.bias]
+        in_specs += [
+            pl.BlockSpec((1, 1), lambda gi, i: (gi, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, k, n), lambda gi, i: (gi, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda gi, i: (gi, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda gi, i: (gi, 0, 0)),
+        ]
+    operands.append(tgt)
+    in_specs.append(pl.BlockSpec((1, block_m, n_last),
+                                 lambda gi, i: (gi, i, 0)))
+    return pl.pallas_call(
+        functools.partial(_grouped_kernel, modes=tuple(modes),
+                          qmaxes=tuple(qmaxes),
+                          pos_acts=tuple(tuple(a) for a in pos_acts),
+                          n_layers=n_layers),
+        grid=(g, m // block_m),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, block_m, n_pay),
+                               lambda gi, i: (gi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n_pay), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "parallel"),
         ),
         interpret=interpret,
     )(*operands)

@@ -9,18 +9,24 @@ full-size runs use the oracle math (same numerics) while kernel tests pin
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.layers import Dense, Input
+from repro.core.layers import ACTIVATIONS, Dense, Input
 from repro.core.prune import BlockSparseWeight
 from repro.kernels import fused_mlp as _fused_mod
 from repro.kernels import ref
-from repro.kernels.fused_mlp import (FUSED_ACTIVATIONS, FusedLayer,
-                                     fused_mlp as _fused_pallas)
+from repro.kernels.fused_mlp import (FUSED_ACTIVATIONS, GROUPED_ACT_IDS,
+                                     GROUPED_KIND_LOGITS, GROUPED_KIND_SCORE,
+                                     FusedLayer, GroupedLayer,
+                                     fused_mlp as _fused_pallas,
+                                     grouped_fused_mlp as _grouped_pallas,
+                                     grouped_vmem_bytes)
 from repro.kernels.qmatmul import qmatmul as _qmatmul_pallas
 from repro.kernels.sparse_matmul import sparse_matmul as _sparse_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
@@ -129,6 +135,24 @@ def _padded_shapes(stack: LayerStack,
     return shapes, bk
 
 
+def _layer_reason(i: int, p: Dict[str, jax.Array], act: str, *,
+                  final: bool, allow_final_softmax: bool) -> Optional[str]:
+    """Per-layer fusability check shared by the single-stack and grouped
+    paths; the grouped megakernel masks a FINAL-layer softmax in-kernel, so
+    only it sets ``allow_final_softmax``."""
+    if act not in FUSED_ACTIVATIONS and not (allow_final_softmax and final
+                                             and act == "softmax"):
+        return (f"layer {i} activation {act!r} is not pad-safe "
+                f"(fusable: {sorted(FUSED_ACTIVATIONS)})")
+    if "qw" in p:
+        if p["qw"].ndim != 2 or "w_scale" not in p or "x_scale" not in p:
+            return (f"layer {i} quantized params are malformed "
+                    "(need 2-D qw with w_scale and x_scale)")
+    elif "w" not in p or p["w"].ndim != 2:
+        return f"layer {i} has no 2-D dense weight"
+    return None
+
+
 def fuse_reason(stack: LayerStack, *,
                 block_k: Optional[int] = None) -> Optional[str]:
     """None when a layer stack can run as one fused Pallas dispatch, else a
@@ -139,15 +163,10 @@ def fuse_reason(stack: LayerStack, *,
     if not stack:
         return "empty layer stack"
     for i, (p, act) in enumerate(stack):
-        if act not in FUSED_ACTIVATIONS:
-            return (f"layer {i} activation {act!r} is not pad-safe "
-                    f"(fusable: {sorted(FUSED_ACTIVATIONS)})")
-        if "qw" in p:
-            if p["qw"].ndim != 2 or "w_scale" not in p or "x_scale" not in p:
-                return (f"layer {i} quantized params are malformed "
-                        "(need 2-D qw with w_scale and x_scale)")
-        elif "w" not in p or p["w"].ndim != 2:
-            return f"layer {i} has no 2-D dense weight"
+        r = _layer_reason(i, p, act, final=(i == len(stack) - 1),
+                          allow_final_softmax=False)
+        if r is not None:
+            return r
     shapes, bk = _padded_shapes(stack, block_k)
     # Mirror fused_mlp's estimate at the worst-case 128-row tile.
     vmem = _fused_mod.fused_vmem_bytes(shapes, block_m=128, block_k=bk)
@@ -245,8 +264,360 @@ def fused_forward(
 
 
 # ---------------------------------------------------------------------------
-# Block-sparse matmul (pruning op-skip)
+# Grouped megakernel packing: a whole heterogeneous fleet in ONE dispatch
 # ---------------------------------------------------------------------------
+
+
+def _stack_w(p: Dict[str, jax.Array]) -> jax.Array:
+    return p["qw"] if "qw" in p else p["w"]
+
+
+def _pad128(v: int) -> int:
+    return -(-v // 128) * 128
+
+
+def _grouped_widths(stacks: Sequence[LayerStack],
+                    k0: Optional[int] = None) -> Tuple[int, list]:
+    """Tight-union arena geometry: per position l, K is the previous union
+    width and N the widest active layer — widened to every *finished* group's
+    true output so skip pass-through never truncates a payload."""
+    n_layers = max(len(s) for s in stacks)
+    true_k0s = [int(_stack_w(s[0][0]).shape[0]) for s in stacks]
+    k0 = max(true_k0s) if k0 is None else k0
+    assert k0 >= max(true_k0s), (k0, true_k0s)
+    widths, prev = [], k0
+    for l in range(n_layers):
+        n = max(int(_stack_w(s[l][0]).shape[1]) if len(s) > l
+                else int(_stack_w(s[-1][0]).shape[1]) for s in stacks)
+        widths.append((prev, n))
+        prev = n
+    return k0, widths
+
+
+def grouped_fuse_reason(stacks: Sequence[LayerStack], *,
+                        names: Optional[Sequence[str]] = None,
+                        k0: Optional[int] = None) -> Optional[str]:
+    """None when a fleet of layer stacks can pack into ONE grouped megakernel
+    dispatch, else a human-readable reason.
+
+    Beyond the per-stack :func:`fuse_reason` checks (relaxed to allow a
+    FINAL-layer softmax, which the grouped kernel masks in-kernel), the
+    packed arena needs one MXU mode per layer position — mixed weight dtypes
+    at a position cannot share a dot — and the *union* (widest-slab) arena
+    must fit the VMEM budget.  The VMEM message carries the per-group slab
+    accounting so ``fused=True`` failures on grouped fleets are diagnosable.
+    """
+    if not stacks:
+        return "no layer stacks"
+    names = list(names) if names is not None else [
+        f"group{g}" for g in range(len(stacks))]
+    for g, stack in enumerate(stacks):
+        if not stack:
+            return f"{names[g]}: empty layer stack"
+        for i, (p, act) in enumerate(stack):
+            r = _layer_reason(i, p, act, final=(i == len(stack) - 1),
+                              allow_final_softmax=True)
+            if r is not None:
+                return f"{names[g]}: {r}"
+    n_layers = max(len(s) for s in stacks)
+    for l in range(n_layers):
+        dtypes = {jnp.dtype(_stack_w(s[l][0]).dtype)
+                  for s in stacks if len(s) > l}
+        if len(dtypes) > 1:
+            return (f"layer position {l} mixes weight dtypes "
+                    f"{sorted(d.name for d in dtypes)} across groups; the "
+                    "packed arena needs one MXU mode per position")
+    k0u, widths = _grouped_widths(stacks, k0)
+    pos_shapes = []
+    prev = _pad128(k0u)
+    for l, (_, n) in enumerate(widths):
+        itemsize = next(jnp.dtype(_stack_w(s[l][0]).dtype).itemsize
+                        for s in stacks if len(s) > l)
+        pos_shapes.append((prev, _pad128(n), itemsize))
+        prev = _pad128(n)
+    vmem = grouped_vmem_bytes(pos_shapes, block_m=128,
+                              n_pay=pos_shapes[-1][1])
+    if vmem > _fused_mod.VMEM_BUDGET_BYTES:
+        slabs = []
+        for g, stack in enumerate(stacks):
+            b = sum(_pad128(int(_stack_w(p).shape[0]))
+                    * _pad128(int(_stack_w(p).shape[1]))
+                    * jnp.dtype(_stack_w(p).dtype).itemsize
+                    for p, _ in stack)
+            slabs.append((names[g], b))
+        widest = max(slabs, key=lambda s: s[1])[0]
+        detail = ", ".join(f"{n}={b}B" for n, b in slabs)
+        return (f"packed-arena VMEM resident set {vmem} bytes exceeds the "
+                f"kernel budget {_fused_mod.VMEM_BUDGET_BYTES} (per-group "
+                f"slabs: {detail}; widest slab {widest!r} drives the union "
+                "arena) — serve this fleet per-group")
+    return None
+
+
+def can_fuse_grouped(stacks: Sequence[LayerStack], *,
+                     names: Optional[Sequence[str]] = None,
+                     k0: Optional[int] = None) -> bool:
+    """True when a fleet of layer stacks can run as ONE grouped megakernel
+    dispatch (:func:`grouped_fuse_reason` is the diagnosable form)."""
+    return grouped_fuse_reason(stacks, names=names, k0=k0) is None
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedPlan:
+    """Static (trace-time) description of a packed heterogeneous fleet.
+
+    Every field is a plain int/str tuple, so the plan is hashable and two
+    fleets with identical *geometry* (shapes, dtypes, activations, head
+    kinds) produce equal plans — serving keys compiled megakernel steps on
+    the plan, and identity-distinct same-shape fleets share one executable.
+    The actual numbers (weight arenas, scales, meta table, per-group true
+    stacks) live in the companion arrays pytree from
+    :func:`build_grouped_plan` and enter the jitted step as runtime operands.
+    """
+
+    n_groups: int
+    k0: int                                   # union input width (tight)
+    n_layers: int
+    widths: Tuple[Tuple[int, int], ...]       # union (K, N) per position
+    modes: Tuple[str, ...]                    # 'real' | 'int8' | 'emu'
+    qmaxes: Tuple[int, ...]
+    pos_acts: Tuple[Tuple[str, ...], ...]     # distinct acts per position
+    acts: Tuple[Tuple[str, ...], ...]         # per group: its own stack acts
+    skips: Tuple[Tuple[int, ...], ...]        # per group x position
+    kinds: Tuple[int, ...]                    # GROUPED_KIND_* per group
+    n_outs: Tuple[int, ...]                   # true final width per group
+    true_k0s: Tuple[int, ...]                 # true input width per group
+    n_out: int                                # union true final width
+    payload_width: int                        # max(n_out | 1) over groups
+
+
+def build_grouped_plan(
+    stacks: Sequence[LayerStack],
+    kinds: Sequence[int],
+    *,
+    k0: Optional[int] = None,
+) -> Tuple[GroupedPlan, Dict]:
+    """Pack per-group layer stacks into the megakernel's arena layout.
+
+    Returns ``(plan, arrays)``: the hashable static plan and a pytree of
+    device arrays — per-position ``w``/``scale``/``bias``/``x_scale``
+    arenas, the (G, 2+2L) int32 ``meta`` table, and the per-group true
+    ``stacks`` params (for the bit-exact per-group fallback forward).  Pad
+    slots follow the zero-row contract; skip slots keep ``x_scale`` at 1 so
+    ``round(h/x_scale)`` never divides by zero.
+
+    ``k0`` widens the union input beyond the widest true input (serving
+    passes the window width so heads whose ``prepare`` drops trailing lanes
+    — the forecast head — are handled by zero weight rows instead of
+    per-group slicing).
+    """
+    reason = grouped_fuse_reason(stacks, k0=k0)
+    if reason is not None:
+        raise ValueError(f"fleet cannot pack into one dispatch: {reason}")
+    n_groups = len(stacks)
+    n_layers = max(len(s) for s in stacks)
+    k0u, widths = _grouped_widths(stacks, k0)
+    true_k0s = tuple(int(_stack_w(s[0][0]).shape[0]) for s in stacks)
+    n_outs = tuple(int(_stack_w(s[-1][0]).shape[1]) for s in stacks)
+    kinds = tuple(int(k) for k in kinds)
+    assert len(kinds) == n_groups, (len(kinds), n_groups)
+    payload_width = max(n if kind == GROUPED_KIND_LOGITS else 1
+                        for n, kind in zip(n_outs, kinds))
+
+    modes, qmaxes, pos_acts = [], [], []
+    w_arenas, s_arenas, b_arenas, xs_arenas = [], [], [], []
+    act_ids = np.zeros((n_groups, n_layers), np.int32)
+    skips = np.zeros((n_groups, n_layers), np.int32)
+    for l, (k, n) in enumerate(widths):
+        dtype = jnp.dtype(next(_stack_w(s[l][0]).dtype
+                               for s in stacks if len(s) > l))
+        mode = _fused_mod._layer_mode(dtype)
+        modes.append(mode)
+        qmaxes.append(int(jnp.iinfo(dtype).max) if mode != "real" else 0)
+        w = np.zeros((n_groups, k, n), dtype)
+        sc = np.zeros((n_groups, 1, n), np.float32)
+        bi = np.zeros((n_groups, 1, n), np.float32)
+        xs = np.ones((n_groups, 1), np.float32)
+        acts_here = set()
+        for g, stack in enumerate(stacks):
+            if len(stack) <= l:
+                skips[g, l] = 1
+                continue
+            p, act = stack[l]
+            wg = np.asarray(_stack_w(p))
+            kg, ng = wg.shape
+            w[g, :kg, :ng] = wg
+            if "qw" in p:
+                combined = np.broadcast_to(
+                    np.asarray(p["x_scale"] * p["w_scale"], np.float32),
+                    (ng,))
+                sc[g, 0, :ng] = combined
+                xs[g, 0] = np.float32(p["x_scale"])
+            b = p.get("b")
+            if b is not None:
+                bi[g, 0, :ng] = np.broadcast_to(
+                    np.asarray(b, np.float32), (ng,))
+            act_ids[g, l] = GROUPED_ACT_IDS[act]
+            acts_here.add(act)
+        pos_acts.append(tuple(sorted(acts_here)))
+        w_arenas.append(jnp.asarray(w))
+        s_arenas.append(jnp.asarray(sc))
+        b_arenas.append(jnp.asarray(bi))
+        xs_arenas.append(jnp.asarray(xs))
+
+    meta = np.concatenate(
+        [np.asarray(kinds, np.int32)[:, None],
+         np.asarray(n_outs, np.int32)[:, None], act_ids, skips], axis=1)
+    arrays = {
+        "w": w_arenas, "scale": s_arenas, "bias": b_arenas,
+        "x_scale": xs_arenas, "meta": jnp.asarray(meta),
+        "stacks": [[{k: jnp.asarray(v) for k, v in p.items()
+                     if v is not None} for p, _ in stack]
+                   for stack in stacks],
+    }
+    plan = GroupedPlan(
+        n_groups=n_groups, k0=k0u, n_layers=n_layers,
+        widths=tuple(widths), modes=tuple(modes), qmaxes=tuple(qmaxes),
+        pos_acts=tuple(pos_acts),
+        acts=tuple(tuple(act for _, act in stack) for stack in stacks),
+        skips=tuple(tuple(int(v) for v in row) for row in skips),
+        kinds=kinds, n_outs=n_outs, true_k0s=true_k0s,
+        n_out=max(n_outs), payload_width=payload_width)
+    return plan, arrays
+
+
+def _grouped_acts_batched(y: jax.Array, plan: GroupedPlan, l: int,
+                          meta: jax.Array) -> jax.Array:
+    """Per-group activation select on a batched (G, M, N) tile, mirroring
+    the kernel: statically unrolled over the position's distinct activations,
+    softmax masked to each group's true output width."""
+    act_id = meta[:, 2 + l][:, None, None]
+    out = y
+    for name in plan.pos_acts[l]:
+        if name == "softmax":
+            n_outs = meta[:, 1][:, None, None]
+            lanes = jnp.arange(y.shape[-1])[None, None, :]
+            z = jnp.where(lanes < n_outs, y, -jnp.inf)
+            zmax = jnp.max(z, axis=-1, keepdims=True)
+            ez = jnp.exp(z - zmax)
+            a = ez / jnp.sum(ez, axis=-1, keepdims=True)
+        else:
+            a = ACTIVATIONS[name](y)
+        if len(plan.pos_acts[l]) == 1:
+            out = a
+        else:
+            out = jnp.where(act_id == GROUPED_ACT_IDS[name], a, out)
+    return out
+
+
+def _fit_cols(x: jax.Array, n: int) -> jax.Array:
+    if x.shape[-1] < n:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, n - x.shape[-1])]
+        return jnp.pad(x, pad)
+    return x[..., :n]
+
+
+def _grouped_forward_batched(x: jax.Array, plan: GroupedPlan,
+                             arrays: Dict) -> jax.Array:
+    """Tight-union batched forward for uniformly-int8 fleets: one batched
+    int8 dot per layer position (int32 accumulation is associativity-exact,
+    so this bit-matches the per-group path) instead of one dot per group
+    per layer."""
+    meta = arrays["meta"]
+    h = x
+    for l in range(plan.n_layers):
+        xs = arrays["x_scale"][l][:, :, None]
+        hq = jnp.clip(jnp.round(h / xs), -plan.qmaxes[l], plan.qmaxes[l])
+        acc = jax.lax.dot_general(
+            hq.astype(jnp.int8), arrays["w"][l],
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32)
+        y = acc * arrays["scale"][l] + arrays["bias"][l]
+        y = _grouped_acts_batched(y, plan, l, meta)
+        if any(row[l] for row in plan.skips):
+            skip = meta[:, 2 + plan.n_layers + l][:, None, None]
+            y = jnp.where(skip == 1, _fit_cols(h, y.shape[-1]), y)
+        h = y
+    return h
+
+
+def grouped_apply(
+    x: jax.Array,
+    plan: GroupedPlan,
+    arrays: Dict,
+    tgt: jax.Array,
+    *,
+    backend: str = "auto",
+    block: int = 128,
+) -> jax.Array:
+    """One forward + head-epilogue dispatch for a packed heterogeneous fleet.
+
+    Args:
+      x: (G, M, plan.k0) f32 — every group's window rows, zero-padded on the
+        trailing lanes up to the union input width.
+      plan/arrays: from :func:`build_grouped_plan`; ``arrays`` may be traced
+        operands inside a jitted step (the plan alone is static).
+      tgt: (G, M, plan.n_out) f32 epilogue targets — the window itself for
+        reconstruction heads, its tail reading for forecast heads, the
+        center row for margin heads, zeros for classifiers.
+
+    Returns (G, M, plan.payload_width) f32 payloads: logits for
+    ``GROUPED_KIND_LOGITS`` groups, the score in lane 0 for
+    ``GROUPED_KIND_SCORE`` groups.
+
+    backend: 'auto' (pallas on TPU else oracle math), 'pallas' (interpret
+    off-TPU), 'ref'.  The oracle path runs per-group true-dimension math
+    (bit-exact against per-group serving for every scheme); uniformly-int8
+    fleets batch each layer position into one grouped int8 dot, which is
+    *also* bit-exact (int32 accumulation).
+    """
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        if all(m == "int8" for m in plan.modes):
+            h = _grouped_forward_batched(x, plan, arrays)
+            with jax.named_scope("head_epilogue"):
+                pays = []
+                for g in range(plan.n_groups):
+                    n = plan.n_outs[g]
+                    if plan.kinds[g] == GROUPED_KIND_LOGITS:
+                        pay = h[g][:, :n]
+                    else:
+                        pay = jnp.mean(
+                            jnp.square(h[g][:, :n] - tgt[g][:, :n]),
+                            axis=-1)[:, None]
+                    pays.append(_fit_cols(pay, plan.payload_width))
+                return jnp.stack(pays)
+        with jax.named_scope("head_epilogue"):
+            return ref.grouped_mlp_ref(
+                x, [list(zip(arrays["stacks"][g],
+                             plan.acts[g])) for g in range(plan.n_groups)],
+                kinds=plan.kinds, true_k0s=plan.true_k0s,
+                n_outs=plan.n_outs, tgt=tgt, n_pay=plan.payload_width)
+
+    # Pallas path: pad the tight arenas to the 128-lane tile and dispatch
+    # the whole fleet as one pallas_call.
+    g, m, _ = x.shape
+    granule = 32 if any(mode == "int8" for mode in plan.modes) else 8
+    block_m = min(block, max(granule, -(-m // granule) * granule))
+    mp = -(-m // block_m) * block_m
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 1, block_m), 2,
+                 _pad128(plan.k0))
+    layers = []
+    for l in range(plan.n_layers):
+        np_ = _pad128(plan.widths[l][1])
+        layers.append(GroupedLayer(
+            w=_pad_to(_pad_to(arrays["w"][l], 1, 128), 2, 128),
+            bias=_pad_to(arrays["bias"][l], 2, np_),
+            scale=_pad_to(arrays["scale"][l], 2, np_),
+            x_scale=arrays["x_scale"][l]))
+    n_last_p = _pad128(plan.widths[-1][1])
+    tgtp = _pad_to(_pad_to(tgt.astype(jnp.float32), 1, block_m), 2, n_last_p)
+    n_pay_p = _pad128(plan.payload_width)
+    out = _grouped_pallas(
+        xp, layers, arrays["meta"], tgtp, n_pay=n_pay_p,
+        modes=plan.modes, qmaxes=plan.qmaxes, pos_acts=plan.pos_acts,
+        block_m=block_m, interpret=not _on_tpu())
+    return out[:, :m, :plan.payload_width]
 
 
 def sparse_dense(

@@ -77,6 +77,46 @@ def fused_mlp_ref(
     return x
 
 
+def grouped_mlp_ref(
+    x: jax.Array,
+    stacks: Sequence[Sequence[Tuple[Dict[str, jax.Array], str]]],
+    *,
+    kinds: Sequence[int],
+    true_k0s: Sequence[int],
+    n_outs: Sequence[int],
+    tgt: jax.Array,
+    n_pay: int,
+) -> jax.Array:
+    """The grouped megakernel's oracle: per-group true-dimension math.
+
+    Each group's window rows ``x[g]`` are sliced to the group's true input
+    width, folded through its OWN stack with :func:`dense_layer_ref` (softmax
+    runs unmasked at the true width), then reduced by the head epilogue:
+    ``kind`` 0 (logits) passes the final activations through, ``kind`` 1
+    (score) writes ``mean((h - tgt)^2)`` over the group's true output lanes
+    into payload lane 0.  Returns (G, M, n_pay) f32, zero-padded lanes.
+
+    This is bit-exact against serving's per-group path by construction — the
+    identical op sequence on identical values — so it doubles as the exact
+    fallback forward inside ``ops.grouped_apply``.
+    """
+    pays = []
+    for g, stack in enumerate(stacks):
+        h = x[g][:, :true_k0s[g]]
+        for p, act in stack:
+            h = dense_layer_ref(h, p, act)
+        if kinds[g] == 0:
+            pay = h
+        else:
+            pay = jnp.mean(jnp.square(h - tgt[g][:, :n_outs[g]]),
+                           axis=-1)[:, None]
+        pad = n_pay - pay.shape[1]
+        if pad:
+            pay = jnp.pad(pay, ((0, 0), (0, pad)))
+        pays.append(pay)
+    return jnp.stack(pays)
+
+
 def sparse_matmul_ref(x: jax.Array, w: BlockSparseWeight) -> jax.Array:
     """Dense reference for the block-sparse matmul: x @ densify(w)."""
     return x @ w.to_dense()

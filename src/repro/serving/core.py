@@ -21,6 +21,31 @@ ONE jitted, donated step over the tuple of ready units' ring arenas —
 each distinct ready-combination ``((unit, block_len), ...)`` compiles
 once and steady state reuses a single executable.
 
+**Megakernel (single-dispatch multi-group steps).**  When every unit's
+stack packs (``ops.grouped_fuse_reason``: all-Dense, one MXU mode per
+layer position, packed-arena VMEM in budget) and every head exposes an
+in-kernel epilogue (``DetectorHead.kernel_epilogue``), a multi-unit ready
+step lowers to exactly ONE dispatch: the co-firing units' rings are
+stacked, scattered and windowed batched over a leading group axis, and
+``ops.grouped_apply`` runs the whole fleet — per-group quantization,
+activations (a final-layer softmax masked to each group's true class
+count) and head epilogues included — as one grouped Pallas call.
+Compiled mega steps are keyed on the *block shape* (the hashable
+``GroupedPlan`` + serving geometry), not the ready subset, so the
+per-ready-combination step-cache explosion collapses to one compiled
+step per shape.  ``megakernel=None`` auto-enables on the unsharded
+path; ``False`` pins the per-group path; ``True`` forces it (sharded
+included) and raises with the packing reason when the fleet cannot
+lower.  Sharded fleets stay per-group by default: the megakernel's
+sharded step bit-matches the canonical *unsharded* math, but the
+per-group sharded graph it would replace rounds 1 ulp differently
+(XLA fusion context), so the default would perturb REAL verdicts
+bitwise — opt in with ``megakernel=True``.  Ready subsets whose
+geometry cannot stack (mixed window or padded-stream extents) fall
+back to the per-group step for that boundary only.  Verdicts
+bit-match (REAL) / epsilon-match (quantized) the per-group path —
+the oracle route is the identical op sequence.
+
 **Async double-buffering (``async_depth=1``).**  Synchronous serving
 blocks the host on every verdict step: dispatch, ``block_until_ready``,
 build verdicts, repeat — so host ingest and device compute take turns
@@ -84,11 +109,12 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import msf_detector as spec
-from repro.core.layers import ACTIVATIONS
+from repro.core.layers import ACTIVATIONS, Dense, Input
 from repro.core.model import Model, ParamTree
 from repro.kernels import ops
 from repro.launch.mesh import make_fleet_mesh
-from repro.sim.heads import ClassifierHead, DetectorHead, ScoreHead
+from repro.sim.heads import (ClassifierHead, DetectorHead, ForecastHead,
+                             ScoreHead)
 
 # Column-shard a Dense layer over the mesh's "model" axis only when its
 # output is at least this wide: below it the all_gather costs more than the
@@ -220,13 +246,20 @@ class StreamStats:
     dispatch, ``windows``/``deadline_misses``/``latencies_s`` at harvest,
     and ``wall_s`` is host time inside ``ingest()``/``flush()`` only —
     device compute overlapped with ingest is deliberately absent, so
-    ``windows_per_s`` reads as sustained host throughput."""
+    ``windows_per_s`` reads as sustained host throughput.
+
+    ``dispatches`` counts *logical kernel dispatches* per step: a megakernel
+    step is 1 regardless of how many groups co-fired; the per-group path
+    charges each ready unit its flavor's cost (fused = 1, per-layer = one
+    per Dense layer).  ``dispatches == steps`` is the single-dispatch
+    guarantee the grouped benches assert."""
 
     steps: int                       # jitted detector steps executed
     cycles: int                      # scan cycles ingested
     windows: int                     # verdicts emitted (streams x steps)
     deadline_misses: int
     wall_s: float                    # total time spent inside ingest()
+    dispatches: int = 0              # logical kernel dispatches issued
     latencies_s: LatencyReservoir = dataclasses.field(
         default_factory=LatencyReservoir)
 
@@ -450,7 +483,8 @@ class _UnitState:
 
     __slots__ = ("name", "head", "window", "offset", "n_streams", "s_pad",
                  "body", "pos", "consumed", "use_fused", "windows",
-                 "adapt", "live_threshold", "fires")
+                 "adapt", "live_threshold", "fires", "stack", "kernel_epi",
+                 "fused_knob", "all_dense", "dispatch_cost")
 
     def __init__(self, name, head, window, offset, n_streams):
         self.name = name
@@ -464,16 +498,54 @@ class _UnitState:
         self.fires = 0                # steps this unit participated in
 
 
+def _unpack_pergroup(outs) -> List[np.ndarray]:
+    """Per-group step outputs -> one host array per ready unit."""
+    return [np.asarray(o) for o in outs]
+
+
 class _InFlight:
     """One dispatched-but-unharvested verdict step (async_depth=1)."""
 
-    __slots__ = ("key", "outs", "cycle", "t0")
+    __slots__ = ("key", "outs", "cycle", "t0", "unpack")
 
-    def __init__(self, key, outs, cycle, t0):
+    def __init__(self, key, outs, cycle, t0, unpack=_unpack_pergroup):
         self.key = key                # ready-combination the step ran under
         self.outs = outs              # per-unit output futures
         self.cycle = cycle            # boundary cycle the windows completed at
         self.t0 = t0                  # dispatch wall-clock (latency origin)
+        self.unpack = unpack          # outs -> [host array per ready unit]
+
+
+class _MegaPack:
+    """One ready-subset's packed megakernel operands + static geometry.
+
+    ``sig`` is the step-cache key material: the hashable
+    :class:`~repro.kernels.ops.GroupedPlan` plus the per-slot serving
+    geometry, epilogue selectors and adapt policy — everything the traced
+    step closes over.  Two identity-distinct subsets with equal ``sig``
+    share ONE compiled step; their numbers (``arrays``/``centers``) enter
+    as runtime operands.  (``calib_update`` must therefore be instance-
+    stateless, which the :class:`~repro.sim.heads.ScoreHead` base impl is.)
+    """
+
+    __slots__ = ("plan", "arrays", "centers", "tgt_sels", "widths",
+                 "heads", "adapts", "sig", "unpack")
+
+    def __init__(self, plan, arrays, centers, tgt_sels, widths, heads,
+                 adapts, sig):
+        self.plan = plan
+        self.arrays = arrays          # packed arenas + meta (operands)
+        self.centers = centers        # (G, 1, plan.n_out) margin centers
+        self.tgt_sels = tgt_sels      # per slot: none|window|tail|center
+        self.widths = widths          # true payload width per slot
+        self.heads = heads
+        self.adapts = adapts
+        self.sig = sig
+
+        def unpack(payload) -> List[np.ndarray]:
+            pay = np.asarray(payload)
+            return [pay[k, :, :w] for k, w in enumerate(widths)]
+        self.unpack = unpack
 
 
 class ServingCore:
@@ -495,7 +567,8 @@ class ServingCore:
                  backend: str = "auto",
                  shard: Optional[bool] = None,
                  mesh: Optional[Mesh] = None,
-                 async_depth: int = 0):
+                 async_depth: int = 0,
+                 megakernel: Optional[bool] = None):
         if not units:
             raise ValueError("need at least one serving unit")
         if any(u.n_streams < 1 for u in units):
@@ -548,10 +621,14 @@ class ServingCore:
             self._arena_sharding = None
             self._calib_sharding = None
             self._counts_sharding = None
+            self._block4_sharding = None
         else:
             self._arena_sharding = NamedSharding(mesh, P("data", None, None))
             self._calib_sharding = NamedSharding(mesh, P("data", None))
             self._counts_sharding = NamedSharding(mesh, P("data"))
+            # Megakernel block operand: (group, stream, reading, feature).
+            self._block4_sharding = NamedSharding(
+                mesh, P(None, "data", None, None))
 
         # -- per-unit geometry, bodies, rings -----------------------------
         self._units: List[_UnitState] = []
@@ -600,6 +677,12 @@ class ServingCore:
             # streams sliced off before verdicts.
             st.s_pad = -(-u.n_streams // self.n_shards) * self.n_shards
             st.use_fused = use_fused
+            st.stack = stack
+            st.kernel_epi = head.kernel_epilogue()
+            st.fused_knob = u.fused
+            st.all_dense = all(isinstance(n.layer, (Input, Dense))
+                               for n in u.model.graph.nodes)
+            st.dispatch_cost = 1 if use_fused else len(stack)
             st.adapt = _resolve_adapt(u.adapt, head, what=u.what)
             st.live_threshold = (head.threshold
                                  if isinstance(head, ScoreHead) else None)
@@ -620,12 +703,43 @@ class ServingCore:
         # fill-in transitions each compile once.
         self._steps: Dict[Tuple, Callable] = {}
 
+        # -- megakernel (single-dispatch multi-group steps) ---------------
+        # Packs are cached per ready subset; compiled steps are keyed by
+        # (pack.sig, block length) — the BLOCK SHAPE, not the subset — so
+        # identity-distinct equal-geometry subsets share one executable and
+        # the per-ready-combination step-cache explosion collapses.
+        self._mega_packs: Dict[Tuple[int, ...], _MegaPack] = {}
+        self._mega_steps: Dict[Tuple, Callable] = {}
+        self._mega_reason = self._compute_mega_reason()
+        if megakernel and self._mega_reason is not None:
+            raise ValueError(
+                "megakernel=True but the fleet cannot pack into one "
+                f"dispatch: {self._mega_reason}")
+        # Auto-enable only on the unsharded path.  The megakernel's sharded
+        # step is bit-stable against the canonical unsharded math, but the
+        # per-group SHARDED graph it replaces rounds a few dot products
+        # differently at 1 ulp (XLA codegen is fusion-context dependent), so
+        # flipping the default under a mesh would perturb REAL verdicts
+        # bitwise against the seed behavior.  ``megakernel=True`` opts the
+        # sharded path in explicitly (REAL agreement vs the per-group
+        # sharded step is then epsilon-level, not bitwise).
+        self._mega = (self._mega_reason is None
+                      and (megakernel is True
+                           or (megakernel is None and self.mesh is None)))
+
         self._count = 0
         self._pending: List[np.ndarray] = []
         self._inflight: Optional[_InFlight] = None
         self.last_outputs: Dict[Optional[str], np.ndarray] = {}
         self.stats = StreamStats(steps=0, cycles=0, windows=0,
                                  deadline_misses=0, wall_s=0.0)
+
+    @property
+    def mega_reason(self) -> Optional[str]:
+        """Why this fleet cannot pack into the single-dispatch megakernel
+        (None when it can — the engine may still serve per-group if the
+        megakernel is disabled by the knob or the sharded default)."""
+        return self._mega_reason
 
     # -- construction helpers ----------------------------------------------
 
@@ -774,6 +888,246 @@ class ServingCore:
                              out_specs=out_specs, check_rep=False)
         return jax.jit(step, donate_argnums=donate)
 
+    # -- megakernel: the whole ready fleet in ONE dispatch -----------------
+
+    def _compute_mega_reason(self) -> Optional[str]:
+        """None when multi-unit ready steps can lower to one grouped
+        megakernel dispatch, else why the engine serves per-group.  The
+        checks compose: engine-level prerequisites first (unit count, mesh,
+        per-unit step flavor, head epilogue hooks), then the kernel-level
+        packing contract (``ops.grouped_fuse_reason`` — per-position MXU
+        mode, packed-arena VMEM budget)."""
+        if len(self._units) < 2:
+            return ("fleet has a single unit; its step is already "
+                    "single-dispatch")
+        if self._model_axis is not None:
+            return ("the megakernel cannot span the model-axis all_gather "
+                    "of column-sharded layers")
+        for st in self._units:
+            what = f"group {st.name!r}: " if st.name else ""
+            if st.fused_knob is False:
+                return f"{what}fused=False pins the per-layer path"
+            if not st.all_dense:
+                return f"{what}the model graph has non-Dense nodes"
+            epi = st.kernel_epi
+            if epi is None:
+                return (f"{what}head {st.head.name!r} has no in-kernel "
+                        "epilogue (kernel_epilogue() returned None)")
+            if epi[0] not in ("logits", "mse") or \
+                    epi[1] not in ("none", "window", "tail", "center"):
+                return f"{what}unknown kernel epilogue spec {epi!r}"
+            if epi[1] == "center" and not hasattr(st.head, "_center"):
+                return (f"{what}'center' epilogue needs a head exposing a "
+                        "_center() row")
+            if type(st.head).prepare not in (DetectorHead.prepare,
+                                             ForecastHead.prepare):
+                return (f"{what}head {st.head.name!r} overrides prepare(); "
+                        "the megakernel feeds the raw window and only "
+                        "subsumes the base window/forecast views via the "
+                        "zero-row contract")
+        return ops.grouped_fuse_reason(
+            [st.stack for st in self._units],
+            names=[st.name or f"unit{i}"
+                   for i, st in enumerate(self._units)],
+            k0=max(st.window * self.n_features for st in self._units))
+
+    def _mega_applicable(self, key: Tuple) -> bool:
+        """True when THIS ready-combination runs as one megakernel dispatch:
+        the engine packs, more than one unit co-fired, and the co-firing
+        units agree on (padded streams, window, block length) — stacking
+        their rings needs one shape.  Units with equal windows always fire
+        with equal block lengths, so steady state of a uniform-geometry
+        fleet (the heterogeneous bench fleet) is always mega."""
+        if not self._mega or len(key) < 2:
+            return False
+        sts = [self._units[gi] for gi, _ in key]
+        return (len({(st.s_pad, st.window) for st in sts}) == 1
+                and len({length for _, length in key}) == 1)
+
+    def _mega_pack(self, subset: Tuple[int, ...]) -> _MegaPack:
+        """The packed arenas + static geometry for one ready subset."""
+        pack = self._mega_packs.get(subset)
+        if pack is not None:
+            return pack
+        sts = [self._units[gi] for gi in subset]
+        kinds = [ops.GROUPED_KIND_LOGITS if st.kernel_epi[0] == "logits"
+                 else ops.GROUPED_KIND_SCORE for st in sts]
+        plan, arrays = ops.build_grouped_plan(
+            [st.stack for st in sts], kinds,
+            k0=max(st.window * self.n_features for st in sts))
+        centers = np.zeros((len(sts), 1, plan.n_out), np.float32)
+        for k, st in enumerate(sts):
+            if st.kernel_epi[1] == "center":
+                c = np.asarray(st.head._center(), np.float32)
+                centers[k, 0, :c.shape[0]] = c
+        widths = tuple(
+            plan.n_outs[k] if kinds[k] == ops.GROUPED_KIND_LOGITS else 1
+            for k in range(len(sts)))
+        adapt_sig = tuple(
+            None if st.adapt is None else
+            (type(st.head).calib_update, st.adapt.capacity,
+             st.adapt.headroom) for st in sts)
+        sig = (plan, tuple((st.s_pad, st.window) for st in sts),
+               tuple(st.kernel_epi for st in sts), adapt_sig)
+        pack = _MegaPack(
+            plan=plan, arrays=arrays, centers=jnp.asarray(centers),
+            tgt_sels=tuple(st.kernel_epi[1] for st in sts), widths=widths,
+            heads=tuple(st.head for st in sts),
+            adapts=tuple(st.adapt for st in sts), sig=sig)
+        self._mega_packs[subset] = pack
+        return pack
+
+    def _get_mega_step(self, subset: Tuple[int, ...],
+                       length: int) -> Tuple[Callable, _MegaPack]:
+        """The jitted single-dispatch step for a ready subset + block shape.
+
+        The step is cached on ``(pack.sig, length)`` — geometry, not unit
+        identity — so every equal-shape ready-combination reuses one
+        executable; the packed arenas, margin centers, positions and live
+        thresholds are runtime operands."""
+        pack = self._mega_pack(subset)
+        cache_key = (pack.sig, length)
+        step = self._mega_steps.get(cache_key)
+        if step is not None:
+            return step, pack
+        plan = pack.plan
+        heads, adapts = pack.heads, pack.adapts
+        backend = self._backend
+        n = len(subset)
+        w = self._units[subset[0]].window
+        f = self.n_features
+        # Per-slot epilogue-target selectors as (G, 1, 1) closure constants:
+        # deterministic from pack.sig, so step sharing stays sound.
+        t_win = np.asarray([s == "window" for s in pack.tgt_sels]
+                           ).reshape(n, 1, 1)
+        t_tail = np.asarray([s == "tail" for s in pack.tgt_sels]
+                            ).reshape(n, 1, 1)
+
+        def _mega(rings, calibs, countss, block, poss, thrs, arrays,
+                  centers):
+            # block: (G, S, L, F) stacked pending readings; poss/thrs are
+            # (G,) vectors.  Same trim-then-scatter contract as the
+            # per-group body, batched over the group axis.
+            with jax.named_scope("ring_scatter"):
+                arena = jnp.stack(rings)                       # (G, S, W, F)
+                s = arena.shape[1]
+                length_ = block.shape[2]
+                off = max(length_ - w, 0)
+                idx = (poss[:, None] + off
+                       + jnp.arange(length_ - off)[None, :]) % w
+                arena = arena.at[
+                    jnp.arange(n)[:, None, None],
+                    jnp.arange(s)[None, :, None],
+                    idx[:, None, :]].set(block[:, :, off:])
+                end = (poss + length_) % w
+                widx = (end[:, None] + jnp.arange(w)[None, :]) % w
+                win = jnp.take_along_axis(
+                    arena, widx[:, None, :, None], axis=2)
+                win = win.reshape(n, s, w * f)
+            with jax.named_scope("megakernel/group_pack"):
+                # Uniform geometry makes the window width the union input
+                # width (plan.k0 == w * f); heads whose model eats less
+                # (forecast) are handled by zero weight rows, not slicing.
+                win_no = ops._fit_cols(win, plan.n_out)
+                tail_no = ops._fit_cols(win[:, :, w * f - f:], plan.n_out)
+                tgt = jnp.where(
+                    t_win, win_no,
+                    jnp.where(t_tail, tail_no,
+                              jnp.broadcast_to(centers, win_no.shape)))
+            payload = ops.grouped_apply(win, plan, arrays, tgt,
+                                        backend=backend)
+            new_calibs, new_counts = [], []
+            for k in range(n):
+                if adapts[k] is not None:
+                    c, cnt = heads[k].calib_update(
+                        calibs[k], countss[k], payload[k][:, :1], thrs[k],
+                        adapts[k].headroom)
+                else:
+                    c, cnt = calibs[k], countss[k]
+                new_calibs.append(c)
+                new_counts.append(cnt)
+            return (tuple(arena[k] for k in range(n)), tuple(new_calibs),
+                    tuple(new_counts), payload)
+
+        if self.mesh is not None:
+            # Rings/calib state keep their per-unit P("data", ...) specs;
+            # the stacked block and payload shard their STREAM axis (axis
+            # 1); packed arenas, meta, centers, positions and thresholds
+            # are replicated operands.  check_rep=False: pallas_call
+            # carries no replication rule.
+            _mega = shard_map(
+                _mega, mesh=self.mesh,
+                in_specs=((P("data", None, None),) * n,
+                          (P("data", None),) * n, (P("data"),) * n,
+                          P(None, "data", None, None), P(), P(), P(), P()),
+                out_specs=((P("data", None, None),) * n,
+                           (P("data", None),) * n, (P("data"),) * n,
+                           P(None, "data", None)),
+                check_rep=False)
+        step = jax.jit(_mega, donate_argnums=(0, 1, 2))
+        self._mega_steps[cache_key] = step
+        return step, pack
+
+    def _dispatch_mega(self, key: Tuple) -> Tuple[Any, _MegaPack]:
+        """Build operands for a ready-combination, advance per-unit serving
+        state and fire the single-dispatch step.  Returns (payload future,
+        pack) — the caller wraps them into an :class:`_InFlight`."""
+        sts = [self._units[gi] for gi, _ in key]
+        length = key[0][1]
+        full = np.stack(self._pending[-length:], axis=1)   # (streams, L, F)
+        blocks, poss, thrs = [], [], []
+        for (gi, _), st in zip(key, sts):
+            span = self._count - st.consumed
+            block = full[st.offset:st.offset + st.n_streams]
+            if st.s_pad != st.n_streams:
+                block = np.pad(
+                    block, ((0, st.s_pad - st.n_streams), (0, 0), (0, 0)))
+            blocks.append(block)
+            poss.append((st.pos + (span - length)) % st.window)
+            thrs.append(0.0 if st.live_threshold is None
+                        else st.live_threshold)
+            st.pos = (st.pos + span) % st.window
+            st.consumed = self._count
+            st.fires += 1
+        step, pack = self._get_mega_step(tuple(gi for gi, _ in key), length)
+        new_rings, new_calibs, new_counts, payload = step(
+            tuple(self._rings[gi] for gi, _ in key),
+            tuple(self._calibs[gi] for gi, _ in key),
+            tuple(self._counts[gi] for gi, _ in key),
+            self._place(np.stack(blocks), self._block4_sharding),
+            jnp.asarray(poss, jnp.int32), jnp.asarray(thrs, jnp.float32),
+            pack.arrays, pack.centers)
+        for (gi, _), ring, calib, counts in zip(key, new_rings, new_calibs,
+                                                new_counts):
+            self._rings[gi] = ring
+            self._calibs[gi] = calib
+            self._counts[gi] = counts
+        return payload, pack
+
+    def _mega_example_args(self, key: Tuple) -> Tuple[Callable, Tuple]:
+        """(step, zeroed operands) for a ready-combination's megakernel
+        step — the warmup compile driver, and the introspection surface the
+        jaxpr dispatch-count suites trace (``jax.make_jaxpr(step)(*args)``
+        shows exactly one ``pallas_call`` under ``backend='pallas'``)."""
+        subset = tuple(gi for gi, _ in key)
+        length = key[0][1]
+        step, pack = self._get_mega_step(subset, length)
+        sts = [self._units[gi] for gi in subset]
+        rings = tuple(self._place(jnp.zeros(
+            (st.s_pad, st.window, self.n_features), jnp.float32))
+            for st in sts)
+        states = [self._calib_state(st) for st in sts]
+        block = self._place(
+            jnp.zeros((len(sts), sts[0].s_pad, length, self.n_features),
+                      jnp.float32), self._block4_sharding)
+        poss = jnp.zeros((len(sts),), jnp.int32)
+        thrs = jnp.asarray([0.0 if st.live_threshold is None
+                            else st.live_threshold for st in sts],
+                           jnp.float32)
+        return step, (rings, tuple(c for c, _ in states),
+                      tuple(cnt for _, cnt in states), block, poss, thrs,
+                      pack.arrays, pack.centers)
+
     # -- readiness schedule ------------------------------------------------
 
     def _ready(self, st: _UnitState, count: int) -> bool:
@@ -800,8 +1154,18 @@ class ServingCore:
     def warmup(self) -> None:
         """Compile every step shape the readiness schedule can produce —
         each unit's window-fill firing and the steady-state all-ready step
-        — outside the serve clock, with the serve-time arena sharding."""
+        — outside the serve clock, with the serve-time arena sharding.
+
+        Routing mirrors :meth:`ingest`: multi-unit uniform-geometry keys
+        compile the megakernel step (cached per BLOCK SHAPE, so distinct
+        ready-combinations of equal shape compile once), everything else
+        the per-group step."""
         for key in self._schedule_keys():
+            if self._mega_applicable(key):
+                step, args = self._mega_example_args(key)
+                *_, payload = step(*args)
+                jax.block_until_ready(payload)
+                continue
             rings = tuple(self._place(jnp.zeros(
                 (self._units[gi].s_pad, self._units[gi].window,
                  self.n_features), jnp.float32)) for gi, _ in key)
@@ -859,44 +1223,59 @@ class ServingCore:
         # ordering exactly (the new step's thr operand bit-matches).
         verdicts = self._harvest() if self.async_depth else []
 
-        key, rings, calibs, countss, blocks, poss, thrs = \
-            [], [], [], [], [], [], []
-        for gi, st in ready:
-            # span = cycles elapsed since the unit's last fired step; the
-            # pruned pending tail holds at least the last
-            # min(span, window) readings.
-            span = self._count - st.consumed
-            length = min(span, st.window)
-            block = np.stack(self._pending[-length:], axis=1)  # (S, L, F)
-            block = block[st.offset:st.offset + st.n_streams]
-            if st.s_pad != st.n_streams:
-                block = np.pad(
-                    block, ((0, st.s_pad - st.n_streams), (0, 0), (0, 0)))
-            # The ring write always ends at (pos + span - 1) mod window;
-            # host-side trimming of long spans shifts the start to match.
-            eff_pos = (st.pos + (span - length)) % st.window
-            key.append((gi, length))
-            rings.append(self._rings[gi])
-            calibs.append(self._calibs[gi])
-            countss.append(self._counts[gi])
-            blocks.append(self._place(block))
-            poss.append(jnp.int32(eff_pos))
-            thrs.append(self._thr(st))
-            st.pos = (st.pos + span) % st.window
-            st.consumed = self._count
-            st.fires += 1
+        mega_key = tuple(
+            (gi, min(self._count - st.consumed, st.window))
+            for gi, st in ready)
+        if self._mega_applicable(mega_key):
+            # Single-dispatch megakernel step over the whole ready subset.
+            outs, pack = self._dispatch_mega(mega_key)
+            key, unpack = list(mega_key), pack.unpack
+            self.stats.dispatches += 1
+        else:
+            key, rings, calibs, countss, blocks, poss, thrs = \
+                [], [], [], [], [], [], []
+            for gi, st in ready:
+                # span = cycles elapsed since the unit's last fired step;
+                # the pruned pending tail holds at least the last
+                # min(span, window) readings.
+                span = self._count - st.consumed
+                length = min(span, st.window)
+                block = np.stack(self._pending[-length:], axis=1)  # (S,L,F)
+                block = block[st.offset:st.offset + st.n_streams]
+                if st.s_pad != st.n_streams:
+                    block = np.pad(
+                        block,
+                        ((0, st.s_pad - st.n_streams), (0, 0), (0, 0)))
+                # The ring write always ends at (pos + span - 1) mod window;
+                # host-side trimming of long spans shifts the start to
+                # match.
+                eff_pos = (st.pos + (span - length)) % st.window
+                key.append((gi, length))
+                rings.append(self._rings[gi])
+                calibs.append(self._calibs[gi])
+                countss.append(self._counts[gi])
+                blocks.append(self._place(block))
+                poss.append(jnp.int32(eff_pos))
+                thrs.append(self._thr(st))
+                st.pos = (st.pos + span) % st.window
+                st.consumed = self._count
+                st.fires += 1
 
-        new_rings, new_calibs, new_counts, outs = self._get_step(tuple(key))(
-            tuple(rings), tuple(calibs), tuple(countss), tuple(blocks),
-            tuple(poss), tuple(thrs))
-        for (gi, _), ring, calib, counts in zip(key, new_rings, new_calibs,
-                                                new_counts):
-            self._rings[gi] = ring
-            self._calibs[gi] = calib
-            self._counts[gi] = counts
+            new_rings, new_calibs, new_counts, outs = \
+                self._get_step(tuple(key))(
+                    tuple(rings), tuple(calibs), tuple(countss),
+                    tuple(blocks), tuple(poss), tuple(thrs))
+            for (gi, _), ring, calib, counts in zip(key, new_rings,
+                                                    new_calibs, new_counts):
+                self._rings[gi] = ring
+                self._calibs[gi] = calib
+                self._counts[gi] = counts
+            unpack = _unpack_pergroup
+            self.stats.dispatches += sum(
+                self._units[gi].dispatch_cost for gi, _ in key)
         self.stats.steps += 1
 
-        flight = _InFlight(tuple(key), outs, self._count - 1, t0)
+        flight = _InFlight(tuple(key), outs, self._count - 1, t0, unpack)
         if self.async_depth:
             # Dispatch-and-return: the step's outputs stay in flight until
             # the next ready boundary (or flush) harvests them — device
@@ -918,15 +1297,16 @@ class ServingCore:
         between the sync path (called right after dispatch) and the async
         path (called at the next boundary / flush), so verdict content is
         bit-identical across modes."""
-        outs = jax.block_until_ready(flight.outs)
+        outs = flight.unpack(jax.block_until_ready(flight.outs))
         latency = time.perf_counter() - flight.t0
         miss = latency > self.deadline_s
         verdicts: List[Verdict] = []
         for (gi, _), out in zip(flight.key, outs):
             st = self._units[gi]
-            # Gathers each device's shard of outputs to the host; pad-stream
+            # Gathers each device's shard of outputs to the host (the mega
+            # unpack also slices each slot's true payload width); pad-stream
             # rows are dropped here and never surface as verdicts.
-            out = np.asarray(out)[:st.n_streams]
+            out = out[:st.n_streams]
             self.last_outputs[st.name] = out
             # Streaming recalibration: re-host the offline score-then-
             # quantile sequence on the rolling state (pad rows sliced off —

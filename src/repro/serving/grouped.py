@@ -15,12 +15,22 @@ pipeline (one group = one :class:`~repro.serving.core.ServingUnit`):
   threshold), its own §6.1 quantization scales, and its own fused/per-layer
   step flavor.
 * Per verdict cadence the engine runs **one jitted, donated step** over the
-  tuple of per-group ring arenas: inside it, every group's body — ring
-  scatter write, modular window unroll, the head's ``prepare`` view, the
-  (fused Pallas) forward and the head's device epilogue — executes on that
-  group's streams only.  An all-Dense group is exactly ONE fused
-  ``pallas_call`` inside the step, so a G-group fleet is G dispatches per
-  step, never G x layers.
+  tuple of per-group ring arenas.  When the fleet packs (all-Dense stacks,
+  one MXU mode per layer position, packed-arena VMEM in budget, every head
+  with an in-kernel epilogue) the step lowers to the **grouped megakernel**:
+  ONE ``pallas_call`` whose grid spans ``(group, stream-blocks)``, all
+  groups' weight/bias/scale slabs in a single padded arena, per-group
+  quantization scales and head epilogues (final-layer softmax masked to
+  each group's true class count) in-kernel — a G-group fleet is ONE
+  dispatch per step, never G (and never G x layers).  ``megakernel=False``
+  pins the classic per-group path (each all-Dense group its own fused
+  ``pallas_call`` inside the step — G dispatches); ``megakernel=True``
+  forces the megakernel — sharded steps included — and raises with the
+  packing reason when the fleet cannot lower; over-budget / mixed-dtype
+  fleets fall back to per-group automatically (``ops.grouped_fuse_reason``
+  is the diagnosable form).  The default (``None``) auto-packs only
+  unsharded fleets — see the ``serving/core.py`` docstring for the 1-ulp
+  REAL rationale.
 * Group ring geometry is per-group: heads may disagree about window extent
   (the forecast head rings one extra reading) and the engine keeps a ring
   arena, write position and readiness schedule per group.  Groups whose
@@ -102,6 +112,15 @@ class GroupedStreamEngine(ServingCore):
     processes; the auto mesh is never wider than the *smallest* group so no
     group degenerates to pure-pad shards; an explicit wider mesh still
     serves correctly through each group's pad-stream contract).
+
+    ``megakernel`` controls the single-dispatch multi-group lowering
+    (module docstring): ``None`` auto-packs when the fleet can *and* the
+    engine is unsharded, ``False`` pins the per-group path, ``True``
+    forces it (sharded steps included; REAL verdicts then agree with the
+    per-group sharded step at epsilon, not bitwise) and raises when the
+    fleet cannot pack (mixed weight dtypes at a layer position, a packed
+    arena over the VMEM budget, a head without an in-kernel epilogue,
+    ``fused=False`` groups, a model-sharded mesh).
     """
 
     def __init__(self, groups: Sequence[ModelGroup], *,
@@ -113,7 +132,8 @@ class GroupedStreamEngine(ServingCore):
                  backend: str = "auto",
                  shard: Optional[bool] = None,
                  mesh: Optional[Mesh] = None,
-                 async_depth: int = 0):
+                 async_depth: int = 0,
+                 megakernel: Optional[bool] = None):
         if not groups:
             raise ValueError("need at least one ModelGroup")
         names = [g.name for g in groups]
@@ -126,7 +146,8 @@ class GroupedStreamEngine(ServingCore):
              for g in groups],
             n_features=n_features, stride=stride, deadline_s=deadline_s,
             norm_mean=norm_mean, norm_std=norm_std, backend=backend,
-            shard=shard, mesh=mesh, async_depth=async_depth)
+            shard=shard, mesh=mesh, async_depth=async_depth,
+            megakernel=megakernel)
 
     # -- introspection -----------------------------------------------------
 

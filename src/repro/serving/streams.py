@@ -52,7 +52,10 @@ For all-Dense models (the detector) the per-layer loop is replaced by the
 fused whole-MLP kernel (``repro.kernels.fused_mlp``): every verdict step is
 ONE Pallas dispatch with all weights VMEM-resident and, under SINT, in-kernel
 requantization between layers — the §6 fused-quantized-arithmetic
-optimization re-hosted on TPU.
+optimization re-hosted on TPU.  (Heterogeneous *multi-model* fleets get the
+same guarantee from the grouped megakernel — see
+:class:`~repro.serving.grouped.GroupedStreamEngine` and the ``serving/core``
+docstring; a single-model engine's step is already single-dispatch.)
 
 Between verdict cycles the engine touches no device state at all: readings
 accumulate host-side and are scattered into the ring inside the next detector

@@ -154,6 +154,17 @@ class DetectorHead:
         verdict payload; traced into the engine's jitted detector step."""
         raise NotImplementedError
 
+    def kernel_epilogue(self) -> Optional[Tuple[str, str]]:
+        """The head's in-kernel epilogue spec for the grouped megakernel
+        (``serving/core.py`` single-dispatch fleets), or None when the
+        epilogue cannot run in-kernel and the engine must fall back to
+        per-group dispatch.  The spec is ``(payload, target)``:
+        ``("logits", "none")`` passes the final activations through;
+        ``("mse", "window" | "tail" | "center")`` reduces to the mean
+        squared error against the whole window, its newest reading, or a
+        fixed center row.  The default is None — custom heads opt in."""
+        return None
+
     def host_verdicts(self, out: np.ndarray,
                       threshold: Optional[float] = None) -> Tuple[
             np.ndarray, Optional[np.ndarray], Optional[np.ndarray],
@@ -205,6 +216,11 @@ class ClassifierHead(DetectorHead):
 
     def epilogue(self, win, out):
         return out                      # the logits ARE the verdict payload
+
+    def kernel_epilogue(self):
+        # Pass-through logits; a final-layer softmax is masked in-kernel to
+        # the group's true class count.
+        return ("logits", "none")
 
     def host_verdicts(self, out, threshold=None):
         pred = out.argmax(axis=-1)
@@ -425,6 +441,9 @@ class ReconstructionHead(ScoreHead):
     def batch_scores(self, outputs, x):
         return jnp.mean(jnp.square(outputs - x), axis=-1)
 
+    def kernel_epilogue(self):
+        return ("mse", "window")
+
     def scores(self, recon: jax.Array, x: jax.Array) -> jax.Array:
         """Per-window anomaly scores from batched reconstructions."""
         return self.batch_scores(recon, x)
@@ -470,6 +489,9 @@ class MarginHead(ScoreHead):
 
     def batch_scores(self, outputs, x):
         return jnp.mean(jnp.square(outputs - self._center()), axis=-1)
+
+    def kernel_epilogue(self):
+        return ("mse", "center")
 
     def st_score(self, w, ctx):
         w.var("I", "DINT")
@@ -532,6 +554,12 @@ class ForecastHead(ScoreHead):
         # x is the FULL window batch; the target is its last reading.
         return jnp.mean(
             jnp.square(outputs - x[..., -self.n_features:]), axis=-1)
+
+    def kernel_epilogue(self):
+        # The megakernel feeds the FULL window as x and zero-pads the model's
+        # weight rows past its true input width, so prepare()'s slice is
+        # subsumed by the zero-row contract; the target is the window tail.
+        return ("mse", "tail")
 
     def st_score(self, w, ctx):
         # ctx.x is the FULL window array (the block keeps the extra ring
